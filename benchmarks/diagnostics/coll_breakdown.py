@@ -1,0 +1,65 @@
+"""Diagnostic: per-shape collective-byte breakdown (loop-aware) for one
+(arch x shape) combo — the tool behind the SS Perf root-cause rows.
+
+Usage:
+  PYTHONPATH=src python benchmarks/diagnostics/coll_breakdown.py \
+      llama3-8b decode_32k [loss_kind]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import re, sys
+from collections import Counter
+from dataclasses import replace
+import jax
+from repro.configs import SHAPES, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.specs import abstract_params, config_for_shape, train_batch_specs, serve_specs
+from repro.train.steps import make_train_step, make_serve_step
+from repro.models import pspec as act_hints
+from repro.roofline import hlo_stats
+
+arch, shape_name, kind = sys.argv[1], sys.argv[2], (sys.argv[3] if len(sys.argv)>3 else "gal_residual_topk")
+shape = SHAPES[shape_name]
+cfg = config_for_shape(get_arch(arch), shape)
+if shape.kind == "train":
+    cfg = replace(cfg, remat=True, attn_chunk=1024)
+mesh = make_production_mesh(); act_hints.set_mesh(mesh)
+aparams = abstract_params(cfg)
+params_in = shd.attach(aparams, shd.params_shardings(cfg, mesh, aparams))
+with mesh:
+    if shape.kind == "train":
+        train_step, opt = make_train_step(cfg, kind, microbatch=2)
+        aopt = jax.eval_shape(opt.init, aparams)
+        opt_in = shd.attach(aopt, shd.opt_state_shardings(cfg, mesh, aopt, aparams))
+        bspecs = train_batch_specs(cfg, shape, kind)
+        batch_in = shd.attach(bspecs, shd.batch_shardings(cfg, mesh, bspecs))
+        compiled = jax.jit(train_step).lower(params_in, opt_in, batch_in).compile()
+    else:
+        serve_step = make_serve_step(cfg)
+        token_spec, cache_spec = serve_specs(cfg, shape)
+        c_sh = shd.cache_shardings(cfg, mesh, cache_spec, shape)
+        t_sh = shd.token_sharding(mesh, token_spec, shape)
+        compiled = jax.jit(serve_step, donate_argnums=(1,)).lower(
+            params_in, shd.attach(cache_spec, c_sh), shd.attach(token_spec, t_sh)).compile()
+hlo = compiled.as_text()
+
+# per-shape collective contribution with trip multipliers
+comps = hlo_stats.parse_hlo(hlo)
+contrib = Counter()
+def walk(name, mult):
+    comp = comps.get(name)
+    if comp is None: return
+    for ins in comp.instructions:
+        op = ins.op; rhs = ins.rhs
+        if op == "while":
+            body = hlo_stats._called(rhs, "body"); cond = hlo_stats._called(rhs, "condition")
+            trips = hlo_stats._trip_count(rhs, comps.get(cond))
+            walk(body, mult*max(trips,1)); continue
+        m = re.search(r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start)?\(", rhs)
+        if m and "-done(" not in rhs:
+            shape_m = hlo_stats._SHAPE_RE.search(hlo_stats._result_part(rhs))
+            contrib[(m.group(1), shape_m.group(0) if shape_m else "?")] += ins.result_bytes*mult
+walk("ENTRY", 1)
+for (kind2, shp), b in contrib.most_common(12):
+    print(f"{b/2**30:9.2f} GiB  {kind2:18s} {shp}")

@@ -1,0 +1,69 @@
+"""Render the SS Dry-run and SS Roofline tables of EXPERIMENTS.md from the
+dry-run JSON artifacts. Usage:
+  PYTHONPATH=src python benchmarks/render_experiments.py > /tmp/tables.md
+"""
+import json
+from pathlib import Path
+
+ART = Path("benchmarks/results/dryrun")
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main():
+    recs = [json.loads(f.read_text()) for f in sorted(ART.glob("*.json"))]
+    pods = {"16x16": [r for r in recs if r["mesh"] == "16x16"],
+            "2x16x16": [r for r in recs if r["mesh"] == "2x16x16"]}
+
+    print("### Dry-run table (memory analysis, per device)\n")
+    for mesh, rows in pods.items():
+        print(f"\n**mesh {mesh} ({rows[0]['n_chips'] if rows else '?'} chips)"
+              f" — {len(rows)}/40 combos lowered+compiled**\n")
+        print("| arch | shape | peak GiB/dev | args GiB | temps GiB |"
+              " collectives (loop-aware) | compile s |")
+        print("|---|---|---|---|---|---|---|")
+        for r in rows:
+            m = r["memory"]
+            coll = r.get("collectives_loop_aware", r["collectives_raw"])
+            cs = " ".join(f"{k.split('-')[-1] if False else k}:"
+                          f"{fmt_bytes(v)}G" for k, v in sorted(coll.items()))
+            print(f"| {r['arch']} | {r['shape']} "
+                  f"| {fmt_bytes(m['peak_bytes_per_device'])} "
+                  f"| {fmt_bytes(m['argument_bytes_per_device'])} "
+                  f"| {fmt_bytes(m['temp_bytes_per_device'])} "
+                  f"| {cs} | {r['compile_s']} |")
+
+    print("\n### Roofline table (single-pod, per chip, seconds per step)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant |"
+          " MODEL_FLOPS/HLO_FLOPs | what moves the dominant term |")
+    print("|---|---|---|---|---|---|---|---|")
+    hints = {
+        ("t_memory", "train"): "less remat recompute / bf16 stash / "
+                               "top-k residual transport",
+        ("t_memory", "prefill"): "flash kernel (fused softmax, no score"
+                                 " round-trips)",
+        ("t_memory", "decode"): "larger decode batch per chip; fuse cache"
+                                " update",
+        ("t_collective", "train"): "overlap FSDP gathers with compute;"
+                                   " reduce-scatter grads",
+        ("t_collective", "decode"): "replicate KV heads instead of hd-"
+                                    "sharding (trade memory)",
+        ("t_compute", "train"): "already compute-bound: raise MFU via"
+                                " larger per-chip batch",
+    }
+    for r in pods["16x16"]:
+        t = r["roofline"]
+        u = r.get("useful_flops_ratio")
+        u = "-" if u is None else f"{u:.2f}"
+        kind = ("train" if r["shape"].startswith("train") else
+                "prefill" if "prefill" in r["shape"] else "decode")
+        hint = hints.get((r["dominant"], kind), "-")
+        print(f"| {r['arch']} | {r['shape']} | {t['t_compute']:.3f} "
+              f"| {t['t_memory']:.3f} | {t['t_collective']:.3f} "
+              f"| {r['dominant'].replace('t_', '')} | {u} | {hint} |")
+
+
+if __name__ == "__main__":
+    main()

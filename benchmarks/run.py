@@ -1,0 +1,106 @@
+"""Benchmark harness: one function per paper table/figure + microbenchmarks.
+
+CSV format: ``name,us_per_call,derived`` for timing rows; table rows are
+``table,setting,metric,value,check``. Roofline numbers come from the dry-run
+artifacts (benchmarks/results/dryrun) and are summarized at the end.
+
+Run: PYTHONPATH=src python -m benchmarks.run [--only tableN]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _time_call(fn, *args, warmup: int = 1, iters: int = 5) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def micro_benchmarks() -> None:
+    """Kernel + protocol micro-timings (CPU interpret mode — relative only)."""
+    from repro.kernels.ops import residual_xent
+    from repro.kernels import ref
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (512, 4096))
+    labels = jax.random.randint(key, (512,), 0, 4096)
+    t_ref = _time_call(jax.jit(ref.residual_xent_ref), logits, labels)
+    print(f"residual_xent_ref_512x4096,{t_ref:.1f},jnp-oracle")
+    from repro.core.weights import fit_weights
+    from repro.core.losses import lq_loss
+    r = jax.random.normal(key, (1024, 8))
+    preds = jax.random.normal(key, (8, 1024, 8))
+    t_w = _time_call(
+        lambda: fit_weights(key, r, preds, lq_loss(2.0), epochs=100))
+    print(f"assistance_weights_fit_M8,{t_w:.1f},adam-100-epochs")
+    from repro.optim.lbfgs import line_search
+    t_ls = _time_call(
+        lambda: line_search(lambda e: jnp.mean((e - 1.7) ** 2), "lbfgs"))
+    print(f"eta_line_search_lbfgs,{t_ls:.1f},scalar")
+
+
+def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
+    """Summarize the dry-run artifacts into the SS Roofline table."""
+    rows = []
+    for f in sorted(Path(outdir).glob("*.json")):
+        r = json.loads(f.read_text())
+        t = r["roofline"]
+        rows.append((r["arch"], r["shape"], r["mesh"],
+                     t["t_compute"], t["t_memory"], t["t_collective"],
+                     r["dominant"], r.get("useful_flops_ratio"),
+                     r["memory"]["peak_bytes_per_device"] / 2 ** 30))
+    if not rows:
+        print("roofline,none,run `python -m repro.launch.dryrun --all` first,0")
+        return
+    print("arch,shape,mesh,t_compute_s,t_memory_s,t_collective_s,"
+          "dominant,useful_flops_ratio,peak_GiB")
+    for row in rows:
+        a, s, m, tc, tm, tl, dom, u, pk = row
+        u = "" if u is None else f"{u:.2f}"
+        print(f"{a},{s},{m},{tc:.4f},{tm:.4f},{tl:.4f},{dom},{u},{pk:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="run a single table (table1..table6, fig4, table14)")
+    ap.add_argument("--skip-tables", action="store_true")
+    args = ap.parse_args()
+
+    from benchmarks.tables import ALL_TABLES
+    print("table,setting,metric,value,check")
+    results = {}
+    if not args.skip_tables:
+        todo = ([args.only] if args.only else list(ALL_TABLES))
+        for name in todo:
+            t0 = time.time()
+            ok = ALL_TABLES[name]()
+            results[name] = ok
+            print(f"# {name}: {'PASS' if ok else 'FAIL'} "
+                  f"({time.time() - t0:.0f}s)", flush=True)
+
+    print("\n# microbenchmarks: name,us_per_call,derived")
+    micro_benchmarks()
+
+    print("\n# roofline table (from dry-run artifacts)")
+    roofline_summary()
+
+    if results:
+        n_pass = sum(results.values())
+        print(f"\n# SUMMARY: {n_pass}/{len(results)} paper-claim checks PASS")
+        if n_pass < len(results):
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: production-grade JAX framework reproducing GAL (NeurIPS 2022)."""
+__version__ = "1.0.0"

@@ -1,0 +1,13 @@
+"""Architecture config registry. Importing this package registers all 10
+assigned architectures plus the paper's own tabular/image settings."""
+from repro.configs.base import (
+    ARCHS, SHAPES, InputShape, ModelConfig, arch_names, get_arch,
+)
+# register all assigned architectures
+from repro.configs import (  # noqa: F401
+    llama3_8b, dbrx_132b, pixtral_12b, stablelm_1_6b, zamba2_2_7b,
+    phi35_moe, granite_8b, qwen3_1_7b, whisper_medium, rwkv6_7b,
+)
+
+ALL_ARCHS = arch_names()
+assert len(ALL_ARCHS) == 10, ALL_ARCHS

@@ -1,0 +1,21 @@
+"""dbrx-132b [moe] — 16 experts top-4, fine-grained [hf:databricks/dbrx-base]."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="dbrx-132b", family="moe",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=10752, vocab=100352,
+    moe_experts=16, moe_topk=4, capacity_factor=1.25,
+    rope_theta=500000.0, act="swiglu", norm="rmsnorm",
+    source="hf:databricks/dbrx-base",
+)
+
+SMOKE = ModelConfig(
+    arch="dbrx-132b-smoke", family="moe",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+    d_ff=256, vocab=512,
+    moe_experts=4, moe_topk=2, capacity_factor=1.5,
+    act="swiglu", norm="rmsnorm", dtype="float32",
+)
+
+register_arch("dbrx-132b")((FULL, SMOKE))

@@ -1,0 +1,22 @@
+"""phi3.5-moe-42b-a6.6b [moe] — 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct]."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=6400, vocab=32064,
+    moe_experts=16, moe_topk=2, capacity_factor=1.25,
+    rope_theta=10000.0, act="swiglu", norm="layernorm",
+    source="hf:microsoft/Phi-3.5-MoE-instruct",
+)
+
+SMOKE = ModelConfig(
+    arch="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2,
+    d_ff=256, vocab=512,
+    moe_experts=4, moe_topk=2, capacity_factor=1.5,
+    act="swiglu", norm="layernorm", dtype="float32",
+)
+
+register_arch("phi3.5-moe-42b-a6.6b")((FULL, SMOKE))

@@ -1,0 +1,21 @@
+"""pixtral-12b [vlm] — pixtral-ViT + mistral-nemo decoder
+[hf:mistralai/Pixtral-12B-2409]. Vision encoder is a STUB: input_specs
+provides patch embeddings; the projector + language decoder are real."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=14336, vocab=131072, rope_theta=1e6,
+    frontend="vision", num_patches=1024,
+    act="swiglu", norm="rmsnorm", source="hf:mistralai/Pixtral-12B-2409",
+)
+
+SMOKE = ModelConfig(
+    arch="pixtral-12b-smoke", family="vlm",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=2, head_dim=64,
+    d_ff=512, vocab=512, frontend="vision", num_patches=16,
+    act="swiglu", norm="rmsnorm", dtype="float32",
+)
+
+register_arch("pixtral-12b")((FULL, SMOKE))

@@ -1,0 +1,20 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free
+[arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="rwkv6-7b", family="ssm",
+    n_layers=32, d_model=4096, n_heads=64, n_kv_heads=64,  # 64 wkv heads (hd 64)
+    d_ff=14336, vocab=65536,
+    block_unit=("rwkv",),
+    act="swiglu", norm="layernorm", source="arXiv:2404.05892",
+)
+
+SMOKE = ModelConfig(
+    arch="rwkv6-7b-smoke", family="ssm",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab=512, block_unit=("rwkv",),
+    act="swiglu", norm="layernorm", dtype="float32",
+)
+
+register_arch("rwkv6-7b")((FULL, SMOKE))

@@ -1,0 +1,28 @@
+"""whisper-medium [audio] — enc-dec, conv frontend STUB [arXiv:2212.04356].
+
+input_specs supplies precomputed mel/conv frame embeddings (B, 1500, d);
+encoder (24L bidirectional) + decoder (24L causal + cross-attn) are real.
+Decode at 32k/500k positions is a structural exercise (real whisper caps at
+448 decoder positions) — noted in DESIGN.md."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="whisper-medium", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab=51865,
+    is_encoder_decoder=True, encoder_layers=24,
+    frontend="audio", num_frames=1500,
+    act="gelu", norm="layernorm",
+    source="arXiv:2212.04356",
+)
+
+SMOKE = ModelConfig(
+    arch="whisper-medium-smoke", family="audio",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab=512,
+    is_encoder_decoder=True, encoder_layers=2,
+    frontend="audio", num_frames=64,
+    act="gelu", norm="layernorm", dtype="float32",
+)
+
+register_arch("whisper-medium")((FULL, SMOKE))

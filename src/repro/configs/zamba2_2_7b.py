@@ -1,0 +1,26 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242]. 54 mamba2 layers; one shared attn+MLP block applied
+after every 6th mamba layer (9 applications, shared params)."""
+from repro.configs.base import ModelConfig, register_arch
+
+FULL = ModelConfig(
+    arch="zamba2-2.7b", family="hybrid",
+    n_layers=54, d_model=2560, n_heads=32, n_kv_heads=32,
+    d_ff=10240, vocab=32000,
+    ssm_state=64, ssm_heads=80, ssm_expand=2, conv_width=4,
+    block_unit=("mamba", "mamba", "mamba", "mamba", "mamba", "mamba",
+                "shared_attn"),
+    shared_attn=True, window=4096,   # shared attn uses a window for long ctx
+    act="swiglu", norm="rmsnorm", source="arXiv:2411.15242",
+)
+
+SMOKE = ModelConfig(
+    arch="zamba2-2.7b-smoke", family="hybrid",
+    n_layers=2, d_model=256, n_heads=4, n_kv_heads=4,
+    d_ff=512, vocab=512,
+    ssm_state=16, ssm_heads=8, ssm_expand=2, conv_width=4,
+    block_unit=("mamba", "mamba", "shared_attn"),
+    shared_attn=True, act="swiglu", norm="rmsnorm", dtype="float32",
+)
+
+register_arch("zamba2-2.7b")((FULL, SMOKE))

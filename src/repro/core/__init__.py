@@ -1,0 +1,8 @@
+"""GAL core: the paper's contribution as a composable JAX module."""
+from repro.core.losses import (
+    Loss, MSELoss, MAELoss, CrossEntropyLoss, BCELoss, lq_loss, get_loss,
+)
+from repro.core.organizations import Organization, make_orgs
+from repro.core.gal import GALConfig, GALResult, fit
+from repro.core import al, boosting, fusion, privacy, protocol_sim, weights
+from repro.core import gal_lm  # noqa: F401

@@ -1,0 +1,44 @@
+"""'Joint' oracle baseline: classical Gradient Boosting (paper Sec. 4).
+
+GAL reduces to Friedman's gradient boosting when M = 1 — the 'Joint' case is
+GAL run with a single organization holding the *concatenated* features. This
+module is the thin wrapper that makes this reduction explicit (and is used by
+tests asserting the reduction).
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gal
+from repro.core.gal import GALConfig, GALResult
+from repro.core.losses import Loss
+from repro.core.organizations import make_orgs
+
+
+def fit_joint(rng: jax.Array, xs: Sequence[jnp.ndarray], y: jnp.ndarray,
+              loss: Loss, model, config: GALConfig = GALConfig(),
+              eval_sets=None, metric_fn=None) -> GALResult:
+    """Centralize all vertical slices into one org and run GAL (== GB)."""
+    x_all = jnp.concatenate(list(xs), axis=-1) if isinstance(xs, (list, tuple)) \
+        else xs
+    orgs = make_orgs([x_all], model)
+    eval_joined = None
+    if eval_sets:
+        eval_joined = {
+            name: ([jnp.concatenate(list(xe), axis=-1)], ye)
+            for name, (xe, ye) in eval_sets.items()
+        }
+    return gal.fit(rng, orgs, y, loss, config, eval_sets=eval_joined,
+                   metric_fn=metric_fn)
+
+
+def fit_alone(rng: jax.Array, x1: jnp.ndarray, y: jnp.ndarray, loss: Loss,
+              model, config: GALConfig = GALConfig(), eval_sets=None,
+              metric_fn=None) -> GALResult:
+    """'Alone' bottom line: Alice boosts on her own slice only."""
+    orgs = make_orgs([x1], model)
+    return gal.fit(rng, orgs, y, loss, config, eval_sets=eval_sets,
+                   metric_fn=metric_fn)

@@ -1,0 +1,84 @@
+"""Centralized data-fusion baselines (paper Sec. 4: 'Interm' and 'Late').
+
+Both require label sharing and synchronous end-to-end training — they are the
+*centralized upper bounds* GAL is compared against, not decentralized methods.
+
+  Late   : F(x) = sum_m f_m(x_m), all f_m trained jointly on L1.
+  Interm : h = sum_m extract_m(x_m); F(x) = head(h) — needs feature models
+           (MLP/CNN/GRU), matching the paper's note that Interm is deep-only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclass
+class FusionResult:
+    mode: str
+    models: list
+    params: list
+    head: object | None
+
+    def predict(self, xs: Sequence[jnp.ndarray]) -> jnp.ndarray:
+        if self.mode == "late":
+            return sum(m.apply(p, x) for m, p, x in zip(self.models, self.params, xs))
+        feats = sum(m.features(p, x) for m, p, x in zip(self.models, self.params, xs))
+        return self.models[0].apply_head(self.head, feats)
+
+
+def _train(objective, params, epochs: int, lr: float):
+    opt = adam(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(carry, _):
+        p, s = carry
+        g = jax.grad(objective)(p)
+        upd, s = opt.update(g, s, p)
+        return (apply_updates(p, upd), s), None
+
+    (params, _), _ = jax.lax.scan(step, (params, state), None, length=epochs)
+    return params
+
+
+def fit_late(rng: jax.Array, xs: Sequence[jnp.ndarray], y: jnp.ndarray,
+             loss: Loss, models, epochs: int = 200, lr: float = 1e-2
+             ) -> FusionResult:
+    models = list(models) if isinstance(models, (list, tuple)) \
+        else [models] * len(xs)
+    k = y.shape[-1]
+    keys = jax.random.split(rng, len(xs))
+    params = [m.init(keys[i], xs[i], k) for i, m in enumerate(models)]
+
+    def objective(ps):
+        f = sum(m.apply(p, x) for m, p, x in zip(models, ps, xs))
+        return loss(y, f)
+
+    params = _train(objective, params, epochs, lr)
+    return FusionResult("late", models, params, None)
+
+
+def fit_interm(rng: jax.Array, xs: Sequence[jnp.ndarray], y: jnp.ndarray,
+               loss: Loss, models, epochs: int = 200, lr: float = 1e-2
+               ) -> FusionResult:
+    models = list(models) if isinstance(models, (list, tuple)) \
+        else [models] * len(xs)
+    k = y.shape[-1]
+    keys = jax.random.split(rng, len(xs) + 1)
+    params = [m.init(keys[i], xs[i], k) for i, m in enumerate(models)]
+    head = models[0].init_head(keys[-1], k)
+
+    def objective(all_params):
+        ps, hd = all_params
+        feats = sum(m.features(p, x) for m, p, x in zip(models, ps, xs))
+        return loss(y, models[0].apply_head(hd, feats))
+
+    params, head = _train(objective, (params, head), epochs, lr)
+    return FusionResult("interm", models, params, head)

@@ -1,0 +1,149 @@
+"""The GAL round engine (paper Algorithm 1), from Alice's perspective.
+
+Per assistance round t:
+  1. r^t   = -dL1(y, F^{t-1})/dF          (pseudo-residual, Alice)
+  2. broadcast r^t (optionally privatized: DP/IP)          -> all orgs
+  3. f_m^t = argmin_{f in F_m} E_N ell_m(r^t, f(x_m))       (orgs, parallel)
+  4. w-hat = argmin_{w in simplex} E_N ell_1(r^t, sum w_m f_m^t)   (Alice)
+  5. eta-hat = argmin_eta E_N L1(y, F^{t-1} + eta sum w_m f_m^t)   (Alice, L-BFGS)
+  6. F^t = F^{t-1} + eta-hat * sum_m w-hat_m f_m^t
+
+Prediction stage: F^T(x*) = F^0 + sum_t eta^t sum_m w_m^t f_m^t(x_m*).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss, lq_loss
+from repro.core.organizations import Organization
+from repro.core.privacy import apply_privacy
+from repro.core.weights import fit_weights, uniform_weights
+from repro.optim.lbfgs import line_search
+
+
+@dataclass(frozen=True)
+class GALConfig:
+    rounds: int = 10
+    # assisted learning rate (paper: L-BFGS line search; eta=1 const ablation)
+    eta_method: str = "lbfgs"          # lbfgs | golden | constant
+    eta0: float = 1.0
+    eta_stop_threshold: float = 0.0    # stop assistance when |eta| drops below
+    # gradient assistance weights (paper: softmax+Adam; uniform ablation)
+    use_weights: bool = True
+    weight_epochs: int = 100
+    weight_lr: float = 0.1
+    weight_decay: float = 5e-4
+    # Alice's regression loss ell_1 used in the weight objective
+    alice_q: float = 2.0
+    # privacy on the broadcast residual (paper Sec 4.5)
+    privacy: Optional[str] = None      # None | dp | ip
+    privacy_alpha: float = 1.0
+    privacy_intervals: int = 1
+
+
+@dataclass
+class GALResult:
+    orgs: List[Organization]
+    loss: Loss
+    f0: jnp.ndarray                    # (1, K)
+    etas: List[float] = field(default_factory=list)
+    weights: List[jnp.ndarray] = field(default_factory=list)
+    history: Dict[str, List[float]] = field(default_factory=dict)
+
+    @property
+    def rounds(self) -> int:
+        return len(self.etas)
+
+    def predict(self, xs: Sequence[jnp.ndarray], rounds: Optional[int] = None
+                ) -> jnp.ndarray:
+        """Prediction stage: assemble org outputs for new data xs[m]."""
+        t_max = self.rounds if rounds is None else min(rounds, self.rounds)
+        n = xs[0].shape[0]
+        f = jnp.broadcast_to(self.f0, (n, self.f0.shape[-1]))
+        for t in range(t_max):
+            preds = jnp.stack([
+                org.predict_round(t, xs[m]) for m, org in enumerate(self.orgs)
+            ])
+            f = f + self.etas[t] * jnp.einsum("m,mnk->nk", self.weights[t], preds)
+        return f
+
+
+def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
+        config: GALConfig = GALConfig(),
+        eval_sets: Optional[Dict[str, tuple]] = None,
+        metric_fn: Optional[Callable] = None) -> GALResult:
+    """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
+    evaluated with the *prediction-stage* mechanics each round (paper's
+    validation protocol), producing the per-round curves of Fig. 4."""
+    n = y.shape[0]
+    k = y.shape[-1]
+    f0 = loss.init_prediction(y)
+    f_train = jnp.broadcast_to(f0, (n, k))
+    alice_loss = lq_loss(config.alice_q)
+
+    result = GALResult(orgs=orgs, loss=loss, f0=f0)
+    hist = result.history
+    hist["train_loss"] = [float(loss(y, f_train))]
+    f_evals = {}
+    if eval_sets:
+        for name, (xs_e, y_e) in eval_sets.items():
+            f_evals[name] = jnp.broadcast_to(f0, (y_e.shape[0], k))
+            hist[f"{name}_loss"] = [float(loss(y_e, f_evals[name]))]
+            if metric_fn is not None:
+                hist[f"{name}_metric"] = [float(metric_fn(y_e, f_evals[name]))]
+
+    for t in range(config.rounds):
+        rng, k_round = jax.random.split(rng)
+        # 1. pseudo-residual
+        residual = loss.residual(y, f_train)
+        # 2. broadcast (privatized in hindsight if configured)
+        r_bcast = apply_privacy(
+            jax.random.fold_in(k_round, 13), residual, config.privacy,
+            alpha=config.privacy_alpha, n_intervals=config.privacy_intervals,
+        )
+        # 3. parallel local fits
+        preds = jnp.stack([
+            org.fit_round(jax.random.fold_in(k_round, org.index), r_bcast)
+            for org in orgs
+        ])                                                    # (M, N, K)
+        # 4. gradient assistance weights
+        if config.use_weights and len(orgs) > 1:
+            w = fit_weights(
+                jax.random.fold_in(k_round, 29), residual, preds, alice_loss,
+                epochs=config.weight_epochs, lr=config.weight_lr,
+                weight_decay=config.weight_decay,
+            )
+        else:
+            w = uniform_weights(len(orgs))
+        direction = jnp.einsum("m,mnk->nk", w, preds)
+        # 5. line-search the gradient assisted learning rate
+        eta = line_search(
+            lambda e: loss(y, f_train + e * direction),
+            method=config.eta_method, x0=config.eta0,
+        )
+        # 6. update the ensemble
+        f_train = f_train + eta * direction
+        result.etas.append(float(eta))
+        result.weights.append(w)
+        hist["train_loss"].append(float(loss(y, f_train)))
+        if eval_sets:
+            for name, (xs_e, y_e) in eval_sets.items():
+                preds_e = jnp.stack([
+                    org.predict_round(t, xs_e[m]) for m, org in enumerate(orgs)
+                ])
+                f_evals[name] = f_evals[name] + eta * jnp.einsum(
+                    "m,mnk->nk", w, preds_e
+                )
+                hist[f"{name}_loss"].append(float(loss(y_e, f_evals[name])))
+                if metric_fn is not None:
+                    hist[f"{name}_metric"].append(
+                        float(metric_fn(y_e, f_evals[name]))
+                    )
+        if (config.eta_stop_threshold > 0.0
+                and abs(float(eta)) < config.eta_stop_threshold):
+            break
+    return result

@@ -1,0 +1,135 @@
+"""GAL at LM scale: the paper's protocol with assigned-architecture orgs.
+
+Alice holds next-token labels; each organization holds a private *view* of
+the token stream (vertical split, e.g. vocab factorization or a modality) and
+a private sequence model (any repro.configs architecture). Per round:
+
+  1. Alice computes the pseudo-residual r = onehot(y) - softmax(F) in logit
+     space with the fused Pallas kernel (repro.kernels.residual_xent).
+  2. r is broadcast — dense (paper-faithful) or top-K compressed
+     (beyond-paper transport; see train.steps.gal_residual_topk_loss).
+  3. Each org runs `local_steps` SGD/AdamW steps of its architecture on the
+     residual-fit objective.
+  4. Alice fits assistance weights on the simplex and line-searches eta.
+  5. F <- F + eta * sum_m w_m f_m.
+
+This module is deliberately *small*: it composes repro.core (weights,
+line-search), repro.train.steps (losses) and repro.models (architectures).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.losses import CrossEntropyLoss
+from repro.core.weights import fit_weights, uniform_weights
+from repro.kernels.ops import residual_xent
+from repro.models import transformer as tfm
+from repro.optim.lbfgs import line_search
+from repro.optim.optimizers import adamw, apply_updates
+from repro.train.steps import make_train_step
+
+
+def compute_residual(labels: jnp.ndarray, ensemble_logits: jnp.ndarray,
+                     use_kernel: bool = True) -> jnp.ndarray:
+    """r = onehot(labels) - softmax(F): (B, S) x (B, S, V) -> (B, S, V)."""
+    return residual_xent(ensemble_logits, labels, use_kernel=use_kernel)
+
+
+def topk_compress(residual: jnp.ndarray, k: int):
+    """Keep the k largest-|r| entries per token: (vals, idx)."""
+    vals, idx = jax.lax.top_k(jnp.abs(residual), k)
+    vals = jnp.take_along_axis(residual, idx, axis=-1)
+    return vals, idx
+
+
+@dataclass
+class LMOrganization:
+    """One org: private token view + private architecture."""
+    index: int
+    cfg: ModelConfig
+    view_fn: Callable[[jnp.ndarray], jnp.ndarray]   # tokens -> private view
+    params: Any = None
+    opt_state: Any = None
+    _train_step: Any = None
+
+    def init(self, rng: jax.Array, lr: float = 1e-3):
+        self.params = tfm.init_params(rng, self.cfg)
+        self._train_step, opt = make_train_step(
+            self.cfg, "gal_residual", lr=lr, weight_decay=0.0)
+        self.opt_state = opt.init(self.params)
+
+    def fit_round(self, rng: jax.Array, tokens: jnp.ndarray,
+                  residual: jnp.ndarray, local_steps: int = 10) -> jnp.ndarray:
+        """Fit the broadcast residual; return f_m(x_m) on the batch."""
+        view = self.view_fn(tokens)
+        batch = {"tokens": view, "residual": residual}
+        for _ in range(local_steps):
+            self.params, self.opt_state, _ = self._train_step(
+                self.params, self.opt_state, batch)
+        logits, _ = tfm.apply(self.params, self.cfg, view)
+        return logits.astype(jnp.float32)
+
+    def predict(self, tokens: jnp.ndarray) -> jnp.ndarray:
+        logits, _ = tfm.apply(self.params, self.cfg, self.view_fn(tokens))
+        return logits.astype(jnp.float32)
+
+
+@dataclass
+class GALLMResult:
+    orgs: List[LMOrganization]
+    f0: jnp.ndarray
+    etas: List[float] = field(default_factory=list)
+    weights: List[jnp.ndarray] = field(default_factory=list)
+    history: Dict[str, List[float]] = field(default_factory=dict)
+
+
+def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
+           labels: jnp.ndarray, rounds: int = 4, local_steps: int = 10,
+           eta_method: str = "lbfgs", use_weights: bool = True,
+           use_kernel: bool = False) -> GALLMResult:
+    """Run GAL assistance rounds on an LM task (single host scale).
+
+    tokens/labels: (B, S) int32. The overarching loss L1 is next-token xent;
+    orgs fit logit-space residuals with ell_2 (paper Table 9 defaults).
+    """
+    b, s = labels.shape
+    xent = CrossEntropyLoss()
+    vocab = orgs[0].cfg.vocab
+    y1 = jax.nn.one_hot(labels.reshape(-1), vocab)
+    # F^0: log class prior over the batch (paper's E_N(y) init, link space)
+    f0 = xent.init_prediction(y1)
+    f = jnp.broadcast_to(f0, (b * s, vocab))
+    result = GALLMResult(orgs=orgs, f0=f0)
+    hist = result.history
+    hist["train_xent"] = [float(xent(y1, f))]
+
+    for t in range(rounds):
+        k_round = jax.random.fold_in(rng, t)
+        residual = compute_residual(
+            labels, f.reshape(b, s, vocab), use_kernel=use_kernel)
+        preds = []
+        for org in orgs:
+            fitted = org.fit_round(jax.random.fold_in(k_round, org.index),
+                                   tokens, residual, local_steps=local_steps)
+            preds.append(fitted.reshape(b * s, vocab))
+        preds = jnp.stack(preds)                       # (M, B*S, V)
+        if use_weights and len(orgs) > 1:
+            w = fit_weights(jax.random.fold_in(k_round, 29),
+                            residual.reshape(b * s, vocab), preds,
+                            lambda r_, f_: jnp.mean(jnp.square(r_ - f_)),
+                            epochs=60)
+        else:
+            w = uniform_weights(len(orgs))
+        direction = jnp.einsum("m,mnk->nk", w, preds)
+        eta = line_search(lambda e: xent(y1, f + e * direction),
+                          method=eta_method, x0=1.0)
+        f = f + eta * direction
+        result.etas.append(float(eta))
+        result.weights.append(w)
+        hist["train_xent"].append(float(xent(y1, f)))
+    return result

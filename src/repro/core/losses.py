@@ -1,0 +1,144 @@
+"""Overarching losses L1 and local regression losses ell_m (paper Sec. 3.2).
+
+Conventions (matching gradient boosting, to which GAL reduces for M=1):
+  * F lives in *link space*: raw logits for classification, raw output for
+    regression. y is one-hot (N, K) for K-class tasks, (N, 1) for regression
+    and binary tasks.
+  * ``residual(y, F)`` is the per-sample pseudo-residual
+        r = -dL(y, F)/dF     (no 1/N factor; the N-mean lives in the loss)
+    which is the tensor Alice broadcasts each assistance round.
+  * ``init_prediction(y)`` gives F^0: E_N(y) mapped to link space (the paper's
+    deterministic unbiased initializer, Appendix A.1).
+
+Local losses ell_q(r, f) = mean |r - f|^q  (paper Table 4, q in {1,1.5,2,4}).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.registry import Registry
+
+LOSSES: Registry = Registry("loss")
+
+
+@dataclass(frozen=True)
+class Loss:
+    name: str
+
+    def __call__(self, y, f):  # mean scalar loss
+        raise NotImplementedError
+
+    def residual(self, y, f):  # per-sample -dL/dF
+        # generic fallback: autodiff of the summed loss
+        return -jax.grad(lambda ff: jnp.sum(self.per_sample(y, ff)))(f)
+
+    def per_sample(self, y, f):
+        raise NotImplementedError
+
+    def init_prediction(self, y):
+        raise NotImplementedError
+
+
+@LOSSES.register("mse")
+@dataclass(frozen=True)
+class MSELoss(Loss):
+    name: str = "mse"
+
+    def per_sample(self, y, f):
+        return 0.5 * jnp.sum(jnp.square(y - f), axis=-1)
+
+    def __call__(self, y, f):
+        return jnp.mean(self.per_sample(y, f))
+
+    def residual(self, y, f):
+        return y - f
+
+    def init_prediction(self, y):
+        return jnp.mean(y, axis=0, keepdims=True)
+
+
+@LOSSES.register("mae")
+@dataclass(frozen=True)
+class MAELoss(Loss):
+    """Mean absolute deviation (the paper's regression metric and an L1 choice)."""
+    name: str = "mae"
+
+    def per_sample(self, y, f):
+        return jnp.sum(jnp.abs(y - f), axis=-1)
+
+    def __call__(self, y, f):
+        return jnp.mean(self.per_sample(y, f))
+
+    def residual(self, y, f):
+        return jnp.sign(y - f)
+
+    def init_prediction(self, y):
+        return jnp.median(y, axis=0, keepdims=True)
+
+
+@LOSSES.register("xent")
+@dataclass(frozen=True)
+class CrossEntropyLoss(Loss):
+    """K-class cross entropy on logits; r = y - softmax(F) (Friedman multiclass)."""
+    name: str = "xent"
+
+    def per_sample(self, y, f):
+        return -jnp.sum(y * jax.nn.log_softmax(f, axis=-1), axis=-1)
+
+    def __call__(self, y, f):
+        return jnp.mean(self.per_sample(y, f))
+
+    def residual(self, y, f):
+        return y - jax.nn.softmax(f, axis=-1)
+
+    def init_prediction(self, y):
+        prior = jnp.clip(jnp.mean(y, axis=0, keepdims=True), 1e-6, 1.0)
+        return jnp.log(prior)
+
+
+@LOSSES.register("bce")
+@dataclass(frozen=True)
+class BCELoss(Loss):
+    """Binary cross entropy on a single logit (imbalanced tasks, MIMICM-like)."""
+    name: str = "bce"
+
+    def per_sample(self, y, f):
+        return jnp.sum(
+            jnp.maximum(f, 0.0) - f * y + jnp.log1p(jnp.exp(-jnp.abs(f))), axis=-1
+        )
+
+    def __call__(self, y, f):
+        return jnp.mean(self.per_sample(y, f))
+
+    def residual(self, y, f):
+        return y - jax.nn.sigmoid(f)
+
+    def init_prediction(self, y):
+        p = jnp.clip(jnp.mean(y, axis=0, keepdims=True), 1e-6, 1 - 1e-6)
+        return jnp.log(p / (1 - p))
+
+
+def lq_loss(q: float):
+    """Local regression loss ell_q(r, f) = mean |r - f|^q (paper Table 4)."""
+    q = float(q)
+
+    def loss(r, f):
+        d = jnp.abs(r - f)
+        if q == 2.0:
+            return jnp.mean(jnp.square(d))
+        if q == 1.0:
+            # smooth |.| for stable autodiff at 0
+            return jnp.mean(jnp.sqrt(jnp.square(d) + 1e-12))
+        return jnp.mean(jnp.power(d + 1e-12, q))
+
+    loss.q = q
+    loss.__name__ = f"l{q:g}"
+    return loss
+
+
+def get_loss(name: str) -> Loss:
+    cls = LOSSES.get(name)
+    return cls() if isinstance(cls, type) else cls

@@ -1,0 +1,130 @@
+"""Organization abstraction (paper Sec. 3.1-3.2).
+
+An Organization privately owns: a vertical feature slice x_m, a model class
+F_m (any zoo model or a sequence-model adapter), and a local regression loss
+ell_m used to fit the broadcast pseudo-residuals. Nothing here is ever read by
+the GAL engine except the *fitted values* f_m^t(x_m) — matching the paper's
+"no sharing of data, models, objective functions" contract.
+
+Deep Model Sharing (paper Sec. 4.2): instead of a fresh model per round, the
+organization keeps one shared feature extractor f_{m,e} and a per-round output
+head f_{m,o}^t, refit each round against the stacked residual history r^{1:t}.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import lq_loss
+from repro.optim.optimizers import adam, apply_updates
+
+
+@dataclass
+class Organization:
+    index: int
+    x_train: Any                       # private vertical slice (N, d_m) or images
+    model: Any                         # zoo model (duck-typed)
+    local_loss: Callable = field(default_factory=lambda: lq_loss(2.0))
+    noise_sigma: float = 0.0           # ablation: noisy org outputs (Table 6)
+    dms: bool = False                  # Deep Model Sharing
+    # --- private state (never read by the engine) ---
+    _round_params: List[Any] = field(default_factory=list)
+    _dms_extractor: Any = None
+    _dms_heads: List[Any] = field(default_factory=list)
+    _residual_history: List[jnp.ndarray] = field(default_factory=list)
+
+    # ------------------------------------------------------------------ fit
+    def fit_round(self, rng: jax.Array, residual: jnp.ndarray) -> jnp.ndarray:
+        """Fit this round's local model to the broadcast pseudo-residual and
+        return the fitted values f_m^t(x_m) on the training set."""
+        if self.dms:
+            fitted = self._fit_round_dms(rng, residual)
+        else:
+            params = self.model.fit(rng, self.x_train, residual, self.local_loss)
+            self._round_params.append(params)
+            fitted = self.model.apply(params, self.x_train)
+        if self.noise_sigma > 0.0:
+            fitted = fitted + self.noise_sigma * jax.random.normal(
+                jax.random.fold_in(rng, 777), fitted.shape
+            )
+        return fitted
+
+    def _fit_round_dms(self, rng: jax.Array, residual: jnp.ndarray) -> jnp.ndarray:
+        """Jointly refit shared extractor + all per-round heads on r^{1:t}."""
+        self._residual_history.append(residual)
+        t = len(self._residual_history)
+        k_out = residual.shape[-1]
+        if self._dms_extractor is None:
+            full = self.model.init(rng, self.x_train, k_out)
+            self._dms_extractor = {k: v for k, v in full.items() if k != "head"}
+        self._dms_heads.append(self.model.init_head(jax.random.fold_in(rng, t), k_out))
+
+        extractor, heads = self._dms_extractor, list(self._dms_heads)
+        model, x, loss = self.model, self.x_train, self.local_loss
+        r_stack = jnp.stack(self._residual_history)     # (t, N, K)
+
+        def objective(params):
+            ext, hds = params
+            feats = model.features({**ext, "head": None}, x)
+            preds = jnp.stack([model.apply_head(h, feats) for h in hds])  # (t,N,K)
+            return loss(r_stack, preds)
+
+        params = (extractor, heads)
+        opt = adam(getattr(model, "lr", 1e-3))
+        state = opt.init(params)
+        epochs = getattr(model, "epochs", 100)
+
+        @jax.jit
+        def step(carry, _):
+            p, s = carry
+            g = jax.grad(objective)(p)
+            upd, s = opt.update(g, s, p)
+            return (apply_updates(p, upd), s), None
+
+        (params, _), _ = jax.lax.scan(step, (params, state), None, length=epochs)
+        self._dms_extractor, new_heads = params
+        self._dms_heads = list(new_heads)
+        feats = model.features({**self._dms_extractor, "head": None}, x)
+        return model.apply_head(self._dms_heads[-1], feats)
+
+    # ------------------------------------------------------------- predict
+    def predict_round(self, t: int, x: jnp.ndarray) -> jnp.ndarray:
+        """Prediction-stage output f_m^t(x_m*) for round t (0-based)."""
+        if self.dms:
+            feats = self.model.features({**self._dms_extractor, "head": None}, x)
+            out = self.model.apply_head(self._dms_heads[t], feats)
+        else:
+            out = self.model.apply(self._round_params[t], x)
+        if self.noise_sigma > 0.0:
+            # Table 6 injects noise during learning AND prediction
+            key = jax.random.PRNGKey(hash((self.index, t)) % (2**31))
+            out = out + self.noise_sigma * jax.random.normal(key, out.shape)
+        return out
+
+    @property
+    def n_rounds_fit(self) -> int:
+        return len(self._dms_heads) if self.dms else len(self._round_params)
+
+
+def make_orgs(xs, model_factory, local_losses=None, dms: bool = False,
+              noise_sigmas=None) -> List[Organization]:
+    """Build M organizations from vertical slices ``xs`` (list of arrays).
+
+    ``model_factory`` is either one zoo model (shared class, private params) or
+    a list of per-org models — the paper's model-autonomy setting (GB-SVM mix).
+    """
+    m = len(xs)
+    models = model_factory if isinstance(model_factory, (list, tuple)) \
+        else [model_factory] * m
+    losses = local_losses if local_losses is not None else [lq_loss(2.0)] * m
+    if callable(losses):
+        losses = [losses] * m
+    sigmas = noise_sigmas if noise_sigmas is not None else [0.0] * m
+    return [
+        Organization(index=i, x_train=xs[i], model=models[i],
+                     local_loss=losses[i], dms=dms, noise_sigma=sigmas[i])
+        for i in range(m)
+    ]

@@ -1,0 +1,52 @@
+"""Privacy enhancement of the broadcast pseudo-residuals (paper Sec. 4.5).
+
+GAL_DP — Laplace mechanism with privacy budget alpha: per-coordinate scale
+b = sensitivity / alpha where sensitivity is the empirical column range of the
+residual tensor (the quantity actually broadcast).
+
+GAL_IP — Interval Privacy (Ding & Ding, 2022) with 1 interval: a random split
+point is drawn per column; each residual reports only the midpoint of the side
+it falls on, revealing a single comparison bit instead of the value.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dp_laplace(rng: jax.Array, residual: jnp.ndarray, alpha: float = 1.0) -> jnp.ndarray:
+    lo = jnp.min(residual, axis=0, keepdims=True)
+    hi = jnp.max(residual, axis=0, keepdims=True)
+    sensitivity = jnp.maximum(hi - lo, 1e-8)
+    scale = sensitivity / alpha
+    u = jax.random.uniform(rng, residual.shape, minval=-0.5 + 1e-6, maxval=0.5 - 1e-6)
+    noise = -scale * jnp.sign(u) * jnp.log1p(-2.0 * jnp.abs(u))
+    return residual + noise
+
+
+def ip_interval(rng: jax.Array, residual: jnp.ndarray, n_intervals: int = 1) -> jnp.ndarray:
+    """residual: (N, K). Each value reports only the midpoint of its bin;
+    bin edges are n_intervals random split points per column."""
+    lo = jnp.min(residual, axis=0)                               # (K,)
+    hi = jnp.max(residual, axis=0)
+    u = jax.random.uniform(rng, (n_intervals,) + lo.shape)
+    splits = jnp.sort(lo[None] + u * (hi - lo)[None], axis=0)    # (S, K)
+    edges = jnp.concatenate(
+        [lo[None], splits, (hi + 1e-6)[None]], axis=0)           # (S+2, K)
+    # bin index: count of edges (excluding last) <= value
+    idx = jnp.sum(residual[None] >= edges[:-1][:, None, :], axis=0) - 1
+    idx = jnp.clip(idx, 0, n_intervals)                          # (N, K)
+    left = jnp.take_along_axis(edges, idx, axis=0)
+    right = jnp.take_along_axis(edges, idx + 1, axis=0)
+    return 0.5 * (left + right)
+
+
+def apply_privacy(rng: jax.Array, residual: jnp.ndarray, mechanism: str | None,
+                  alpha: float = 1.0, n_intervals: int = 1) -> jnp.ndarray:
+    if mechanism in (None, "none"):
+        return residual
+    if mechanism == "dp":
+        return dp_laplace(rng, residual, alpha=alpha)
+    if mechanism == "ip":
+        return ip_interval(rng, residual, n_intervals=n_intervals)
+    raise ValueError(f"unknown privacy mechanism {mechanism!r}")

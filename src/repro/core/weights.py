@@ -1,0 +1,44 @@
+"""Gradient assistance weights (paper Alg. 1 + Appendix D.4.2).
+
+Alice solves  w-hat = argmin_{w in simplex}  E_N ell_1(r, sum_m w_m f_m)
+with the simplex enforced by a softmax parametrization and optimized with
+Adam (paper Table 9: lr 1e-1, weight decay 5e-4, 100 epochs).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import adam, apply_updates
+
+
+def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
+                loss: Callable, epochs: int = 100, lr: float = 0.1,
+                weight_decay: float = 5e-4) -> jnp.ndarray:
+    """preds: (M, N, K) stacked org outputs; returns w in the M-simplex."""
+    m = preds.shape[0]
+    theta0 = jnp.zeros((m,))
+
+    def objective(theta):
+        w = jax.nn.softmax(theta)
+        combined = jnp.einsum("m,mnk->nk", w, preds)
+        return loss(residual, combined)
+
+    opt = adam(lr, weight_decay=weight_decay)
+    state = opt.init(theta0)
+
+    def step(carry, _):
+        theta, st = carry
+        g = jax.grad(objective)(theta)
+        upd, st = opt.update(g, st, theta)
+        return (apply_updates(theta, upd), st), None
+
+    (theta, _), _ = jax.lax.scan(step, (theta0, state), None, length=epochs)
+    return jax.nn.softmax(theta)
+
+
+def uniform_weights(m: int) -> jnp.ndarray:
+    """Direct-average ablation (Table 6, 'Weight = x')."""
+    return jnp.full((m,), 1.0 / m)

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (
+    make_regression, make_blobs, make_classification, make_patch_images,
+    make_multimodal_series, train_test_split, Dataset,
+)
+from repro.data.partition import split_features, split_image_patches, split_channels
+from repro.data.tokens import make_token_stream, token_batches

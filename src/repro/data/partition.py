@@ -1,0 +1,69 @@
+"""Vertical partitioning of features across organizations (paper Fig. 2).
+
+  split_features       — disjoint column blocks of tabular data (UCI setting)
+  split_image_patches  — grid patches of images (MNIST/CIFAR setting, Fig. 6):
+                         M=2 -> left/right halves; M=4 -> 2x2; M=8 -> 2x4
+  split_channels       — channel groups (modalities) of series/embeddings
+                         (MIMIC setting; also the LM-scale GAL org split)
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def split_features(x: jnp.ndarray, m: int, rng: np.random.Generator | None = None
+                   ) -> List[jnp.ndarray]:
+    """Random (or contiguous) disjoint column blocks, sizes as equal as possible."""
+    d = x.shape[-1]
+    if m > d:
+        raise ValueError(f"cannot split {d} features across {m} orgs")
+    cols = np.arange(d) if rng is None else rng.permutation(d)
+    blocks = np.array_split(cols, m)
+    return [x[:, np.sort(b)] for b in blocks]
+
+
+def _patch_grid(m: int):
+    if m == 1:
+        return 1, 1
+    if m == 2:
+        return 1, 2
+    if m == 4:
+        return 2, 2
+    if m == 8:
+        return 2, 4
+    if m == 12:
+        return 3, 4
+    raise ValueError(f"unsupported patch count {m}")
+
+
+def split_image_patches(x: jnp.ndarray, m: int) -> List[jnp.ndarray]:
+    """x: (N, H, W, C) -> M patch tensors (N, H/gh, W/gw, C), row-major order
+    so that for M=8 the centre patches are indices {1,2,5,6} (paper's
+    1-indexed {2,3,6,7})."""
+    gh, gw = _patch_grid(m)
+    n, h, w, c = x.shape
+    ph, pw = h // gh, w // gw
+    patches = []
+    for i in range(gh):
+        for j in range(gw):
+            patches.append(x[:, i * ph:(i + 1) * ph, j * pw:(j + 1) * pw, :])
+    return patches
+
+
+def split_channels(x: jnp.ndarray, sizes: Sequence[int]) -> List[jnp.ndarray]:
+    """Split the last axis into groups of the given sizes (modalities)."""
+    if sum(sizes) != x.shape[-1]:
+        raise ValueError(f"sizes {sizes} do not sum to {x.shape[-1]}")
+    out, start = [], 0
+    for s in sizes:
+        out.append(x[..., start:start + s])
+        start += s
+    return out
+
+
+def flatten_for_tabular(patches: List[jnp.ndarray]) -> List[jnp.ndarray]:
+    """Flatten image patches to (N, ph*pw*C) for tabular local models."""
+    return [p.reshape(p.shape[0], -1) for p in patches]

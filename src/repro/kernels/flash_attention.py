@@ -1,0 +1,111 @@
+"""Flash attention (causal / sliding-window / full) with GQA head mapping.
+
+Online-softmax streaming over K/V tiles with f32 accumulators in VMEM
+scratch; q/k/v tiles are BlockSpec-mapped per (batch*head, q-block, k-block).
+Block shapes (BQ, BK) = (128, 128) align the MXU; per-step VMEM working set is
+q(BQ,hd) + k(BK,hd) + v(BK,hd) + acc(BQ,hd) + p(BQ,BK) ~= 0.4 MiB at hd=128.
+
+TPU-adaptation note (DESIGN.md Sec. 5): out-of-window / future K blocks are
+masked rather than skipped; on real TPU a grid-skip via scalar prefetch would
+drop them — recorded as a perf-pass candidate, irrelevant for interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BQ = 128
+BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  seq_len: int, n_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)                   # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)
+    s = (q @ k.T) * scale                              # (BQ, BK)
+
+    qpos = iq * BQ + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 0)
+    kpos = ik * BK + jax.lax.broadcasted_iota(jnp.int32, (BQ, BK), 1)
+    mask = kpos < seq_len                              # K padding
+    if causal:
+        mask = mask & (qpos >= kpos)
+    if window is not None:
+        mask = mask & (qpos - kpos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+    m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _emit():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "interpret"))
+def flash_attention_kernel(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           causal: bool = True,
+                           window: Optional[int] = None,
+                           interpret: bool = True) -> jnp.ndarray:
+    """q: (B, S, H, hd); k,v: (B, S, KV, hd) -> (B, S, H, hd) in q.dtype."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    sp = -(-s // max(BQ, BK)) * max(BQ, BK)
+    qp = jnp.pad(q, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, sp - s), (0, 0), (0, 0)))
+    # (B*H, S, hd) query-major layout; kv index derived in the BlockSpec map
+    qf = jnp.moveaxis(qp, 2, 1).reshape(b * h, sp, hd)
+    kf = jnp.moveaxis(kp, 2, 1).reshape(b * kv, sp, hd)
+    vf = jnp.moveaxis(vp, 2, 1).reshape(b * kv, sp, hd)
+    n_q, n_k = sp // BQ, sp // BK
+
+    def kv_map(bh, iq, ik):
+        return (bh // h) * kv + (bh % h) // g, ik, 0
+
+    kernel = functools.partial(
+        _flash_kernel, scale=hd ** -0.5, causal=causal, window=window,
+        seq_len=s, n_k=n_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(b * h, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, BQ, hd), lambda bh, iq, ik: (bh, iq, 0)),
+            pl.BlockSpec((1, BK, hd), kv_map),
+            pl.BlockSpec((1, BK, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, BQ, hd), lambda bh, iq, ik: (bh, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sp, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((BQ, hd), jnp.float32),   # acc
+            pltpu.VMEM((BQ,), jnp.float32),      # running max
+            pltpu.VMEM((BQ,), jnp.float32),      # running sumexp
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(b, h, sp, hd)[:, :, :s]
+    return jnp.moveaxis(out, 1, 2)

@@ -1,0 +1,44 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On this CPU container kernels run with interpret=True (Python emulation of
+the kernel body); on TPU set REPRO_PALLAS_INTERPRET=0 to lower for real.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.residual_xent import residual_xent_kernel
+from repro.kernels import ref
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def residual_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                  use_kernel: bool = True) -> jnp.ndarray:
+    """Pseudo-residual r = onehot(labels) - softmax(logits).
+
+    logits: (..., V); labels: (...,) int32. Returns f32 residual.
+    """
+    lead = logits.shape[:-1]
+    v = logits.shape[-1]
+    flat = logits.reshape(-1, v)
+    lab = labels.reshape(-1)
+    if use_kernel:
+        out = residual_xent_kernel(flat, lab, interpret=INTERPRET)
+    else:
+        out = ref.residual_xent_ref(flat, lab)
+    return out.reshape(*lead, v)
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True, window: Optional[int] = None,
+                    use_kernel: bool = True) -> jnp.ndarray:
+    """GQA flash attention. q: (B,S,H,hd); k,v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    if use_kernel:
+        return flash_attention_kernel(q, k, v, causal=causal, window=window,
+                                      interpret=INTERPRET)
+    return ref.flash_attention_ref(q, k, v, causal=causal, window=window)

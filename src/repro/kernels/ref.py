@@ -1,0 +1,46 @@
+"""Pure-jnp oracles for the Pallas kernels (allclose targets in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def residual_xent_ref(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Pseudo-residual of cross entropy: r = onehot(labels) - softmax(logits).
+
+    logits: (T, V) any float dtype; labels: (T,) int32. Returns f32 (T, V).
+    This is the tensor Alice broadcasts each GAL round (paper Alg. 1 step 1)
+    for an LM-scale overarching loss.
+    """
+    sm = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return onehot - sm
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        window: Optional[int] = None) -> jnp.ndarray:
+    """Reference GQA attention. q: (B, S, H, hd); k,v: (B, S, KV, hd).
+    Returns (B, S, H, hd) in q.dtype. Softmax in f32."""
+    b, s, h, hd = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, s, kv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(s)
+    mask = None
+    if causal:
+        mask = qpos[:, None] >= qpos[None, :]
+    if window is not None:
+        wmask = qpos[:, None] - qpos[None, :] < window
+        mask = wmask if mask is None else (mask & wmask)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, hd)

@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers and compiles on the production mesh, and extract the
+memory/cost/collective numbers the roofline analysis reads.
+
+MUST be run as its own process (the XLA_FLAGS line above precedes any jax
+import; jax locks the device count on first init).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out benchmarks/results/dryrun
+"""
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.configs import SHAPES, arch_names, get_arch
+from repro.launch.mesh import make_production_mesh
+from repro.launch import sharding as shd
+from repro.launch.specs import (
+    abstract_params, config_for_shape, input_specs, train_batch_specs,
+    serve_specs,
+)
+from repro.roofline.analysis import (
+    collective_bytes_from_hlo, dominant_term, model_flops, roofline_terms,
+)
+from repro.roofline.hlo_stats import analyze as hlo_analyze
+from repro.train.steps import make_prefill_step, make_serve_step, make_train_step
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+                loss_kind: str = "gal_residual", flash: bool = False,
+                remat: bool | None = None, attn_chunk: int | None = None,
+                fsdp: bool = True, microbatch: int | None = None,
+                remat_group: bool = False, keep_hlo: bool = False) -> dict:
+    from dataclasses import replace
+    shape = SHAPES[shape_name]
+    cfg = config_for_shape(get_arch(arch), shape)
+    # baseline memory policy: remat for training, chunked (flash-style)
+    # attention for the long full-sequence shapes — required to fit HBM at
+    # all (see EXPERIMENTS.md SS Dry-run)
+    if remat is None:
+        remat = shape.kind == "train"
+    if attn_chunk is None:
+        attn_chunk = 1024 if (shape.kind in ("train", "prefill")
+                              and shape.seq_len >= 4096) else 0
+    if microbatch is None:
+        microbatch = 2 if shape.kind == "train" else 1
+    cfg = replace(cfg, remat=remat, attn_chunk=attn_chunk,
+                  remat_group=remat_group)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    from repro.models import pspec as act_hints
+    act_hints.set_mesh(mesh)   # activation with_sharding_constraint policy
+    aparams = abstract_params(cfg)
+    p_sh = shd.params_shardings(cfg, mesh, aparams, fsdp=fsdp)
+    params_in = shd.attach(aparams, p_sh)
+
+    t0 = time.time()
+    with mesh:
+        if shape.kind == "train":
+            train_step, opt = make_train_step(cfg, loss_kind, flash=flash,
+                                              microbatch=microbatch)
+            aopt = jax.eval_shape(opt.init, aparams)
+            o_sh = shd.opt_state_shardings(cfg, mesh, aopt, aparams)
+            opt_in = shd.attach(aopt, o_sh)
+            bspecs = train_batch_specs(cfg, shape, loss_kind)
+            b_sh = shd.batch_shardings(cfg, mesh, bspecs)
+            batch_in = shd.attach(bspecs, b_sh)
+            lowered = jax.jit(train_step).lower(params_in, opt_in, batch_in)
+        elif shape.kind == "prefill":
+            prefill_step = make_prefill_step(cfg, flash=flash)
+            bspecs = train_batch_specs(cfg, shape, loss_kind)
+            b_sh = shd.batch_shardings(cfg, mesh, bspecs)
+            batch_in = shd.attach(bspecs, b_sh)
+            lowered = jax.jit(prefill_step).lower(params_in, batch_in)
+        else:  # decode
+            serve_step = make_serve_step(cfg)
+            token_spec, cache_spec = serve_specs(cfg, shape)
+            c_sh = shd.cache_shardings(cfg, mesh, cache_spec, shape)
+            t_sh = shd.token_sharding(mesh, token_spec, shape)
+            cache_in = shd.attach(cache_spec, c_sh)
+            token_in = shd.attach(token_spec, t_sh)
+            lowered = jax.jit(serve_step, donate_argnums=(1,)).lower(
+                params_in, cache_in, token_in)   # cache donated: in/out alias
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = collective_bytes_from_hlo(hlo)
+
+    # loop-aware accounting: walk the call graph multiplying while-loop trip
+    # counts (XLA's cost model counts scan bodies once)
+    stats = hlo_analyze(hlo)
+    terms = roofline_terms(cost, coll, n_chips, scan_correction=1.0)
+    terms_corr = roofline_terms(
+        {"flops": stats.flops, "bytes accessed": stats.bytes_accessed},
+        stats.collectives, n_chips, scan_correction=1.0)
+
+    mf = model_flops(cfg, shape, train=(shape.kind == "train"))
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "loss_kind": loss_kind,
+        "flash": flash, "remat": remat, "microbatch": microbatch,
+        "attn_chunk": attn_chunk, "fsdp": fsdp,
+        "window": cfg.window,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes_per_device": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes_per_device": (
+                getattr(mem, "argument_size_in_bytes", 0)
+                + getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)),
+        },
+        "collectives_raw": coll,
+        "collectives_loop_aware": stats.collectives,
+        "roofline_raw": terms,
+        "roofline": terms_corr,
+        "dominant": dominant_term(terms_corr),
+        "model_flops_global": mf,
+        "useful_flops_ratio": (
+            mf / (terms_corr["hlo_flops_per_chip"] * mesh.size)
+            if terms_corr["hlo_flops_per_chip"] else None),
+    }
+    if keep_hlo:
+        rec["hlo_len"] = len(hlo)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--loss-kind", default="gal_residual")
+    ap.add_argument("--flash", action="store_true")
+    ap.add_argument("--remat", type=int, default=None, choices=(0, 1))
+    ap.add_argument("--attn-chunk", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--microbatch", type=int, default=None)
+    ap.add_argument("--remat-group", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    combos = []
+    archs = arch_names() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                combos.append((a, s, mp))
+
+    outdir = Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+    failures = 0
+    for arch, shape, mp in combos:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        if args.loss_kind != "gal_residual":
+            tag += f"__{args.loss_kind}"
+        if args.flash:
+            tag += "__flash"
+        if args.remat is not None:
+            tag += f"__remat{args.remat}"
+        if args.attn_chunk is not None:
+            tag += f"__chunk{args.attn_chunk}"
+        if args.no_fsdp:
+            tag += "__nofsdp"
+        if args.microbatch is not None:
+            tag += f"__mb{args.microbatch}"
+        if args.remat_group:
+            tag += "__rg"
+        fp = outdir / f"{tag}.json"
+        if fp.exists():
+            print(f"[skip] {tag} (cached)")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = lower_combo(arch, shape, multi_pod=mp,
+                              loss_kind=args.loss_kind, flash=args.flash,
+                              remat=None if args.remat is None else bool(args.remat),
+                              attn_chunk=args.attn_chunk,
+                              fsdp=not args.no_fsdp,
+                              microbatch=args.microbatch,
+                              remat_group=args.remat_group)
+            fp.write_text(json.dumps(rec, indent=1))
+            r = rec["roofline"]
+            print(f"  ok compile={rec['compile_s']}s "
+                  f"peak/dev={rec['memory']['peak_bytes_per_device']/2**30:.2f}GiB "
+                  f"compute={r['t_compute']*1e3:.2f}ms "
+                  f"mem={r['t_memory']*1e3:.2f}ms "
+                  f"coll={r['t_collective']*1e3:.2f}ms "
+                  f"dom={rec['dominant']}", flush=True)
+        except Exception as e:  # noqa: BLE001 — report and continue the sweep
+            failures += 1
+            print(f"  FAIL {tag}: {type(e).__name__}: {e}", flush=True)
+            (outdir / f"{tag}.FAIL").write_text(f"{type(e).__name__}: {e}")
+    print(f"done: {len(combos) - failures}/{len(combos)} lowered+compiled")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,237 @@
+"""Sharding policy: map parameter paths / input kinds to PartitionSpecs.
+
+Tensor parallelism on "model": attention q-heads, MLP hidden, MoE experts
+(1/shard at E=16), mamba inner channels, rwkv heads, and the vocab dim of the
+unembedding + residual/logits. Batch parallelism on ("pod","data").
+
+GQA note: when n_kv_heads < model-axis size the KV projections stay
+replicated (standard TP>KV practice, DESIGN.md Sec. 4).
+long_500k note: batch=1 cannot shard on data — the KV window / state heads
+shard on "model" and the data axis idles (recorded in the roofline analysis).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.launch.mesh import axis_size, data_axes
+
+
+def _pad(spec_tail, ndim):
+    """Right-align a spec tail over the trailing dims; leading dims None
+    (stacked-layer axes)."""
+    tail = list(spec_tail)
+    lead = [None] * (ndim - len(tail))
+    return P(*(lead + tail))
+
+
+def _path_str(path) -> str:
+    return "/".join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path
+    )
+
+
+def _add_fsdp(spec: P, leaf, mesh) -> P:
+    """ZeRO-3 style: shard one remaining matrix dim of every >=2D weight on
+    "data" (params + Adam m/v then fit 132B on 256 chips; XLA all-gathers the
+    weight just-in-time per layer). Only the trailing 2 dims are considered —
+    stacked-layer leading dims stay unsharded so lax.scan slicing is local."""
+    nd = leaf.ndim
+    if nd < 2:
+        return spec
+    d_size = axis_size(mesh, "data")
+    entries = list(spec) + [None] * (nd - len(spec))
+    cands = [d for d in (nd - 1, nd - 2)
+             if entries[d] is None and leaf.shape[d] % d_size == 0]
+    if not cands:
+        return spec
+    best = max(cands, key=lambda d: leaf.shape[d])
+    entries[best] = "data"
+    return P(*entries)
+
+
+def param_pspec(cfg: ModelConfig, mesh, path, leaf, fsdp: bool = True) -> P:
+    name = _path_str(path)
+    nd = leaf.ndim
+    m = axis_size(mesh, "model")
+
+    def col():   # shard output/column dim
+        return _pad([None, "model"], nd)
+
+    def row():   # shard input/row (contraction) dim
+        return _pad(["model", None], nd)
+
+    def rep():
+        return P()
+
+    last = name.rsplit("/", 1)[-1]
+    if "embed" in name:
+        if last == "tok":
+            # (V, d) sharded on d: the residual stream then flip-flops between
+            # d-sharded (carry/stash) and batch-sharded (attention/MLP) each
+            # layer. Measured trade (llama3 train_4k): the flip costs ~290 GiB
+            # of per-layer activation all-gathers, BUT the 2D-sharded
+            # (batch x d) stash is 16x smaller than a d-replicated one
+            # (14.9 vs 29+ GiB peak) and total HBM traffic is lower. The
+            # gather-heavy layout still wins the roofline max-term. A
+            # replicated table (rep()) flips the trade — kept as the
+            # documented alternative (EXPERIMENTS.md SS Perf).
+            return _pad([None, "model"], nd) if cfg.d_model % m == 0 else rep()
+        if last == "unembed":                      # (d, V): logits sharded on V
+            return _pad([None, "model"], nd) if cfg.vocab % m == 0 else rep()
+        return rep()
+    if last == "proj":                              # vlm projector (d, d)
+        return col()
+    if "moe" in name:
+        if last == "router":
+            return rep()
+        return _pad(["model", None, None], nd)      # (E, ., .): expert parallel
+    if "attn" in name or "cross" in name:
+        if last == "wq":
+            return col() if (cfg.n_heads * cfg.hd) % m == 0 else rep()
+        if last in ("wk", "wv"):
+            return col() if cfg.n_kv_heads % m == 0 else rep()
+        if last == "wo":
+            return row() if (cfg.n_heads * cfg.hd) % m == 0 else rep()
+        return rep()                                # qk norms, ln scales
+    if "mlp" in name:
+        if last in ("w_gate", "w_up"):
+            return col() if cfg.d_ff % m == 0 else rep()
+        if last == "w_down":
+            return row() if cfg.d_ff % m == 0 else rep()
+        return rep()
+    if "mamba" in name:
+        d_in = cfg.ssm_expand * cfg.d_model
+        if last in ("w_z", "w_x"):
+            return col() if d_in % m == 0 else rep()
+        if last == "out_proj":
+            return row() if d_in % m == 0 else rep()
+        return rep()                                # w_B/w_C/w_dt/conv/scalars
+    if "tmix" in name:
+        if last in ("wr", "wk", "wv", "wg"):
+            return col() if cfg.d_model % m == 0 else rep()
+        if last == "wo":
+            return row() if cfg.d_model % m == 0 else rep()
+        return rep()
+    if "cmix" in name:
+        if last == "wk":
+            return col() if cfg.d_ff % m == 0 else rep()
+        if last == "wv":
+            return row() if cfg.d_ff % m == 0 else rep()
+        return rep()
+    return rep()                                    # norms and everything else
+
+
+def params_shardings(cfg: ModelConfig, mesh, abstract_params,
+                     fsdp: bool = True):
+    def one(path, leaf):
+        name = _path_str(path)
+        spec = param_pspec(cfg, mesh, path, leaf)
+        # the token table is gathered by token id — a row-sharded (V on
+        # "data") table trips the SPMD partitioner inside scans, so it is
+        # exempt from FSDP (it is d-sharded on "model" already)
+        if fsdp and not name.endswith("tok"):
+            spec = _add_fsdp(spec, leaf, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, abstract_params)
+
+
+def opt_state_shardings(cfg: ModelConfig, mesh, abstract_opt_state,
+                        abstract_params):
+    """Adam m/v mirror the parameter shardings; step is replicated."""
+    del abstract_opt_state  # adam-family: {"step", "m", "v"}
+    p_sh = params_shardings(cfg, mesh, abstract_params)
+    rep = NamedSharding(mesh, P())
+    return {"step": rep, "m": p_sh, "v": p_sh}
+
+
+def batch_shardings(cfg: ModelConfig, mesh, batch_specs) -> Dict[str, Any]:
+    dp = data_axes(mesh)
+    dp_size = axis_size(mesh, dp)
+    out = {}
+    for k, sds in batch_specs.items():
+        b = sds.shape[0]
+        batch_axis = dp if b % dp_size == 0 else None
+        if k == "residual":
+            spec = P(batch_axis, None, "model" if cfg.vocab % axis_size(
+                mesh, "model") == 0 else None)
+        elif k in ("tokens", "labels"):
+            spec = P(batch_axis, None)
+        elif k in ("patches", "frames"):
+            spec = P(batch_axis, None, None)
+        elif k in ("residual_idx", "residual_vals"):
+            spec = P(batch_axis, None, None)
+        else:
+            spec = P(*([batch_axis] + [None] * (len(sds.shape) - 1)))
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh, cache_specs, shape: InputShape):
+    """KV/state cache shardings for serve_step."""
+    dp = data_axes(mesh)
+    dp_size = axis_size(mesh, dp)
+    m = axis_size(mesh, "model")
+    b = shape.global_batch
+    batch_ok = b % dp_size == 0
+
+    def one(path, leaf):
+        name = _path_str(path)
+        last = name.rsplit("/", 1)[-1]
+        nd = leaf.ndim
+        if last in ("k", "v"):
+            # (L, B, Ssize, KV, hd): batch on data + head_dim on model keeps
+            # the 275 GB decode_32k caches ~1 GiB/device; attention contracts
+            # hd -> small score all-reduce instead of resharding the cache
+            hd_dim = leaf.shape[-1]
+            ssize = leaf.shape[2]
+            hd_ax = "model" if hd_dim % m == 0 else None
+            if batch_ok:
+                return NamedSharding(mesh, _pad([dp, None, None, hd_ax], nd))
+            if ssize % m == 0:
+                return NamedSharding(mesh, _pad([None, "model", None, None], nd))
+            return NamedSharding(mesh, P())
+        if last == "h":  # mamba state (U, per, B, H, N, P)
+            hdim = leaf.shape[-3]
+            if batch_ok:
+                return NamedSharding(mesh, _pad([dp, None, None, None], nd))
+            if hdim % m == 0:
+                return NamedSharding(mesh, _pad(["model", None, None], nd))
+            return NamedSharding(mesh, P())
+        if last == "state":  # rwkv (L, B, H, hd, hd)
+            hdim = leaf.shape[-3]
+            if batch_ok:
+                return NamedSharding(mesh, _pad([dp, None, None, None], nd))
+            if hdim % m == 0:
+                return NamedSharding(mesh, _pad(["model", None, None], nd))
+            return NamedSharding(mesh, P())
+        if last == "encoder_out":  # (B, F, d)
+            return NamedSharding(mesh, P(dp if batch_ok else None, None, None))
+        if last in ("conv", "tmix_prev", "cmix_prev"):
+            # (..., B, X, C): batch is third-from-last
+            if batch_ok:
+                return NamedSharding(
+                    mesh, P(*([None] * (nd - 3) + [dp, None, None])))
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P())              # pos, idx
+
+    return jax.tree_util.tree_map_with_path(one, cache_specs)
+
+
+def token_sharding(mesh, token_spec, shape: InputShape):
+    dp = data_axes(mesh)
+    ok = shape.global_batch % axis_size(mesh, dp) == 0
+    return NamedSharding(mesh, P(dp if ok else None, None))
+
+
+def attach(sds_tree, sharding_tree):
+    """Return ShapeDtypeStructs carrying shardings (for .lower())."""
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        sds_tree, sharding_tree,
+    )

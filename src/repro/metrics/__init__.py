@@ -1,0 +1,1 @@
+from repro.metrics.metrics import accuracy, mad, auroc, metric_for_task

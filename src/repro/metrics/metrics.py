@@ -1,0 +1,41 @@
+"""Evaluation metrics matching the paper: Accuracy, MAD, AUROC."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def accuracy(y_onehot: jnp.ndarray, f_logits: jnp.ndarray) -> jnp.ndarray:
+    return jnp.mean(
+        (jnp.argmax(f_logits, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32)
+    ) * 100.0
+
+
+def mad(y: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """Mean absolute deviation (paper's regression metric)."""
+    return jnp.mean(jnp.abs(y - f))
+
+
+def auroc(y: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
+    """Rank-based AUROC for binary labels y in {0,1}, scores = logits.
+    Mann-Whitney U with average ranks for ties."""
+    y = y.reshape(-1)
+    s = scores.reshape(-1)
+    order = jnp.argsort(s)
+    ranks = jnp.empty_like(s).at[order].set(jnp.arange(1, s.shape[0] + 1,
+                                                       dtype=s.dtype))
+    # average tied ranks (approximate: use argsort ranks; exact for unique)
+    n_pos = jnp.sum(y)
+    n_neg = y.shape[0] - n_pos
+    sum_pos = jnp.sum(ranks * y)
+    u = sum_pos - n_pos * (n_pos + 1) / 2.0
+    return jnp.where((n_pos > 0) & (n_neg > 0), u / (n_pos * n_neg), 0.5)
+
+
+def metric_for_task(task: str):
+    if task == "classification":
+        return accuracy
+    if task == "regression":
+        return mad
+    if task == "binary":
+        return auroc
+    raise ValueError(f"unknown task {task!r}")

@@ -1,0 +1,1 @@
+from repro.models.zoo import ZOO, get_local_model

@@ -1,0 +1,249 @@
+"""GQA attention: training (causal / sliding-window / bidirectional), cross
+attention (enc-dec), and single-token decode against a KV or ring cache.
+
+Shapes: x (B, S, d); q (B, S, H, hd); k,v (B, S, KV, hd).
+
+TP design note (DESIGN.md Sec. 4): KV heads are *repeated* to the full H
+before the score einsum, so the head dimension shards cleanly on the "model"
+mesh axis even when KV < model-axis size (a grouped (kv, g) einsum cannot
+represent a 16-way shard of 8 KV heads — that was measured as a 137 GiB/device
+unsharded score tensor in the first dry-run; see EXPERIMENTS.md SS Perf).
+Softmax accumulates in f32. A Pallas flash path (repro.kernels) can be
+enabled via ``flash=True`` for the training shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import pspec
+from repro.models.layers import (
+    apply_rotary, dense_init, dtype_of, rms_head_norm, rotary_freqs,
+)
+
+NEG_INF = -1e30
+
+
+def init_attention(rng, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.hd
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 6)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, dt),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, dt),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, dt),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, dt),
+    }
+    if cfg.qk_norm and not cross:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(params, cfg: ModelConfig, xq, xkv):
+    b, s, _ = xq.shape
+    skv = xkv.shape[1]
+    hd = cfg.hd
+    q = (xq @ params["wq"]).reshape(b, s, cfg.n_heads, hd)
+    k = (xkv @ params["wk"]).reshape(b, skv, cfg.n_kv_heads, hd)
+    v = (xkv @ params["wv"]).reshape(b, skv, cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = rms_head_norm(q, params["q_norm"])
+        k = rms_head_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def _repeat_kv(k, n_heads: int):
+    """(B, S, KV, hd) -> (B, S, H, hd) by repeating each KV head G times."""
+    g = n_heads // k.shape[2]
+    if g == 1:
+        return k
+    return jnp.repeat(k, g, axis=2)
+
+
+def _constrain_heads(x, batch: int):
+    """(B, S, H, hd): shard batch on data axes, heads on model."""
+    return pspec.constrain(
+        x, P(pspec.batch_axis(batch), None, pspec.model_axis(x.shape[2]), None))
+
+
+def attention_train(params, cfg: ModelConfig, x, positions,
+                    causal: bool = True, window: Optional[int] = None,
+                    kv_src: Optional[jnp.ndarray] = None,
+                    flash: bool = False):
+    """Full-sequence attention. kv_src != None -> cross attention (no mask).
+    Returns (B, S, d)."""
+    b = x.shape[0]
+    xkv = kv_src if kv_src is not None else x
+    q, k, v = _project_qkv(params, cfg, x, xkv)
+    if kv_src is None:  # self-attention: rotary on q and k
+        sin, cos = rotary_freqs(cfg, positions)
+        q = apply_rotary(q, sin, cos)
+        k = apply_rotary(k, sin, cos)
+    if flash and kv_src is None:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        out = out.reshape(out.shape[0], out.shape[1], -1)
+        return out @ params["wo"]
+    k = _repeat_kv(k, cfg.n_heads)
+    v = _repeat_kv(v, cfg.n_heads)
+    q = _constrain_heads(q, b)
+    k = _constrain_heads(k, b)
+    v = _constrain_heads(v, b)
+    s_len = q.shape[1]
+    self_attn = kv_src is None
+    chunk = cfg.attn_chunk
+    if chunk and s_len > chunk and s_len % chunk == 0 and self_attn:
+        out = _chunked_attention(q, k, v, positions, causal=causal and
+                                 self_attn, window=window if self_attn else
+                                 None, chunk=chunk, batch=b,
+                                 heads=cfg.n_heads)
+    else:
+        scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                            preferred_element_type=jnp.float32) \
+            * (cfg.hd ** -0.5)
+        scores = pspec.constrain(
+            scores, P(pspec.batch_axis(b), pspec.model_axis(cfg.n_heads),
+                      None, None))
+        if self_attn and (causal or window is not None):
+            qpos = positions[:, None] if positions.ndim == 1 else positions
+            kpos = qpos
+            mask = None
+            if causal:
+                mask = qpos[..., :, None] >= kpos[..., None, :]
+            if window is not None:
+                wmask = qpos[..., :, None] - kpos[..., None, :] < window
+                mask = wmask if mask is None else (mask & wmask)
+            scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+    out = out.reshape(b, out.shape[1], -1)
+    return out @ params["wo"]
+
+
+def _chunked_attention(q, k, v, positions, *, causal, window, chunk, batch,
+                       heads):
+    """Online-softmax attention scanning KV chunks — the flash algorithm in
+    pure JAX so GSPMD can partition it (the Pallas kernel is the TPU-native
+    twin; see repro.kernels.flash_attention). Bounds the score temporaries to
+    (B, H, S, chunk) instead of (B, H, S, S).
+
+    q: (B, S, H, hd); k,v: (B, T, H, hd) (heads already repeated)."""
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    nc = t // chunk
+    scale = hd ** -0.5
+    qf = q   # bf16 operands; f32 accumulation via preferred_element_type
+    qpos = positions if positions.ndim == 2 else positions[None]
+    kc = jnp.moveaxis(k.reshape(b, nc, chunk, h, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nc, chunk, h, hd), 1, 0)
+    kposc = jnp.moveaxis(qpos.reshape(b, nc, chunk), 1, 0)
+    bax = pspec.batch_axis(batch)
+    hax = pspec.model_axis(heads)
+
+    def step(carry, inputs):
+        m, l, acc = carry
+        kb, vb, kp = inputs                           # (B,C,H,hd), (B,C)
+        srs = jnp.einsum("bshd,bchd->bhsc", qf, kb,
+                         preferred_element_type=jnp.float32) * scale
+        srs = pspec.constrain(srs, P(bax, hax, None, None))
+        mask = None
+        if causal:
+            mask = qpos[:, None, :, None] >= kp[:, None, None, :]
+        if window is not None:
+            wm = qpos[:, None, :, None] - kp[:, None, None, :] < window
+            mask = wm if mask is None else (mask & wm)
+        if mask is not None:
+            srs = jnp.where(mask, srs, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(srs, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(srs - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhsc,bchd->bhsd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    acc0 = pspec.constrain(jnp.zeros((b, h, s, hd), jnp.float32),
+                           P(bax, hax, None, None))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, acc0), (kc, vc, kposc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)   # (B,S,H,hd)
+
+
+# ----------------------------------------------------------------- caches
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype):
+    """Full KV cache (decode_32k) or ring cache (window decode)."""
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((batch, size, cfg.n_kv_heads, cfg.hd), dtype),
+        "pos": jnp.full((size,), -1, jnp.int32),   # true positions (ring aware)
+        "idx": jnp.zeros((), jnp.int32),           # next true position
+    }
+
+
+def attention_decode(params, cfg: ModelConfig, x, cache,
+                     kv_src: Optional[jnp.ndarray] = None):
+    """One-token decode. x: (B, 1, d). Returns (out (B,1,d), new_cache).
+
+    Cross attention (kv_src given) attends to precomputed encoder states and
+    leaves the cache untouched.
+    """
+    b = x.shape[0]
+    if kv_src is not None:
+        q, k, v = _project_qkv(params, cfg, x, kv_src)
+        k = _repeat_kv(k, cfg.n_heads)
+        v = _repeat_kv(v, cfg.n_heads)
+        scores = jnp.einsum("bshd,bthd->bhst", q, k,
+                            preferred_element_type=jnp.float32) \
+            * (cfg.hd ** -0.5)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = jnp.einsum("bhst,bthd->bshd", probs.astype(v.dtype), v)
+        return out.reshape(b, 1, -1) @ params["wo"], cache
+
+    idx = cache["idx"]
+    pos = jnp.full((b, 1), idx, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, cfg, x, x)
+    sin, cos = rotary_freqs(cfg, pos)
+    q = apply_rotary(q, sin, cos)
+    k_new = apply_rotary(k_new, sin, cos)
+
+    size = cache["k"].shape[1]
+    slot = idx % size if cfg.window else idx   # ring buffer when windowed
+    k_cache = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    pos_arr = jax.lax.dynamic_update_slice(
+        cache["pos"], idx[None].astype(jnp.int32), (slot,))
+
+    # decode layout: the cache is hd-sharded on "model" (the only way the
+    # 275 GB decode_32k caches fit). q must match, or XLA gathers the WHOLE
+    # cache in f32 per layer to reconcile the H-sharded q with the hd-sharded
+    # k (measured: 64 GiB/chip/step all-gather). hd-sharded q makes the score
+    # einsum a local partial-sum + a ~34 MB/layer all-reduce.
+    bax = pspec.batch_axis(b)
+    hd_ax = pspec.model_axis(cfg.hd)
+    qspec = P(bax, None, None, hd_ax)
+    q = pspec.constrain(q, qspec)
+    k_full = pspec.constrain(_repeat_kv(k_cache, cfg.n_heads), qspec)
+    v_full = pspec.constrain(_repeat_kv(v_cache, cfg.n_heads), qspec)
+    scores = jnp.einsum("bshd,bthd->bhst", q, k_full,
+                        preferred_element_type=jnp.float32) * (cfg.hd ** -0.5)
+    scores = pspec.constrain(scores, P(bax, None, None, None))
+    valid = (pos_arr >= 0) & (pos_arr <= idx)
+    if cfg.window is not None:
+        valid = valid & (pos_arr > idx - cfg.window)
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", probs.astype(v_full.dtype), v_full)
+    out = out.reshape(b, 1, -1) @ params["wo"]
+    new_cache = {"k": k_cache, "v": v_cache, "pos": pos_arr, "idx": idx + 1}
+    return out, new_cache

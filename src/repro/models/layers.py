@@ -1,0 +1,122 @@
+"""Shared neural layers for the architecture substrate (pure JAX, pytree params).
+
+All layers follow the convention:
+  init_*(rng, cfg, ...) -> params dict
+  apply signature (params, x, ...) -> y
+Compute dtype follows x.dtype; norm statistics and softmax accumulate in f32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(rng, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+# ------------------------------------------------------------------- norms
+def init_norm(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(params, x, eps: float = 1e-6):
+    # statistics accumulate in f32 but the elementwise math stays in x.dtype:
+    # a full astype(f32) of x makes XLA hoist the convert into the layer-scan
+    # stash, doubling the remat memory (measured; EXPERIMENTS.md SS Perf)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True,
+                       dtype=jnp.float32) - jnp.square(mu)
+        inv = jax.lax.rsqrt(var + eps)
+        out = ((x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+               * params["scale"].astype(x.dtype)
+               + params["bias"].astype(x.dtype))
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True, dtype=jnp.float32)
+        inv = jax.lax.rsqrt(ms + eps)
+        out = x * inv.astype(x.dtype) * params["scale"].astype(x.dtype)
+    return out
+
+
+def rms_head_norm(x, scale, eps: float = 1e-6):
+    """Per-head RMSNorm over head_dim (qwen3 qk-norm)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------- rotary
+def rotary_freqs(cfg: ModelConfig, positions: jnp.ndarray) -> tuple:
+    """positions: (..., S) int -> (sin, cos) of shape (..., S, hd/2), f32."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    angles = positions[..., None].astype(jnp.float32) * inv
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rotary(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: (..., S, H, hd); sin/cos: (..., S, hd/2) broadcast over heads.
+    Rotation in x.dtype (sin/cos cast down) — see apply_norm's dtype note."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    s = sin[..., None, :].astype(x.dtype)
+    c = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ------------------------------------------------------------------- MLP
+def init_mlp(rng, cfg: ModelConfig, d: int | None = None, ff: int | None = None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 3)
+    if cfg.act == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, ff, dt),
+                "w_up": dense_init(ks[1], d, ff, dt),
+                "w_down": dense_init(ks[2], ff, d, dt)}
+    return {"w_up": dense_init(ks[0], d, ff, dt),
+            "w_down": dense_init(ks[1], ff, d, dt)}
+
+
+def apply_mlp(params, x, act: str = "swiglu"):
+    from jax.sharding import PartitionSpec as P
+    from repro.models import pspec
+    if act == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    h = pspec.constrain(
+        h, P(pspec.batch_axis(x.shape[0]), None, pspec.model_axis(h.shape[-1])))
+    return h @ params["w_down"]
+
+
+# ------------------------------------------------------------------- embed
+def init_embedding(rng, cfg: ModelConfig):
+    dt = dtype_of(cfg)
+    k1, k2 = jax.random.split(rng)
+    p = {"tok": (jax.random.normal(k1, (cfg.vocab, cfg.d_model), jnp.float32)
+                 * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(k2, cfg.d_model, cfg.vocab, dt,
+                                  scale=cfg.d_model ** -0.5)
+    return p
+
+
+def embed_tokens(params, tokens):
+    return jnp.take(params["tok"], tokens, axis=0)
+
+
+def unembed(params, h):
+    if "unembed" in params:
+        return h @ params["unembed"]
+    return h @ params["tok"].T

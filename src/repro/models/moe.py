@@ -1,0 +1,100 @@
+"""Mixture-of-Experts layer: top-k router + GShard-style *grouped* capacity
+dispatch.
+
+Tokens are dispatched within groups (the batch rows), so the one-hot
+dispatch/combine tensors are (G, Tg, E, C) with C = cf*k*Tg/E — linear in
+tokens, unlike a flat (T, E, C) which is quadratic and infeasible at the
+1M-token train_4k shape. Under pjit with experts sharded on "model" and
+groups on the data axes, the dispatch einsum is THE all-to-all of MoE
+(visible in the dry-run HLO).
+
+Also computes the Switch/GShard auxiliary load-balance loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import pspec
+from repro.models.layers import dense_init, dtype_of
+
+GROUP = 1024  # tokens per dispatch group
+
+
+def init_moe(rng, cfg: ModelConfig):
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 4)
+
+    def expert_stack(key, d_in, d_out):
+        scale = d_in ** -0.5
+        return (jax.random.normal(key, (e, d_in, d_out), jnp.float32)
+                * scale).astype(dt)
+
+    p = {"router": dense_init(ks[0], d, e, jnp.float32)}
+    if cfg.act == "swiglu":
+        p["w_gate"] = expert_stack(ks[1], d, ff)
+        p["w_up"] = expert_stack(ks[2], d, ff)
+    else:
+        p["w_up"] = expert_stack(ks[1], d, ff)
+    p["w_down"] = expert_stack(ks[3], ff, d)
+    return p
+
+
+def apply_moe(params, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (y (B, S, d), aux_loss scalar f32).
+
+    Groups are GROUP-token slices of each batch row (total dispatch footprint
+    is cf*k*T*Tg — linear in tokens, quadratic only in the small Tg)."""
+    bsz, s, d = x.shape
+    e, k = cfg.moe_experts, cfg.moe_topk
+    tg = min(s, GROUP)
+    g = bsz * (s // tg)
+    capacity = max(int(cfg.capacity_factor * k * tg / e), k)
+
+    xt = x.reshape(g, tg, d)
+    # router matmul in compute dtype; upcast only the tiny (G,Tg,E) logits —
+    # an f32 xt here pushes f32 cotangents through the whole backward pass
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)                   # (G,Tg,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # load-balance auxiliary loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, e), axis=2), axis=(0, 1)) / k
+    aux = e * jnp.sum(me * ce)
+
+    # position of each (token, choice) within its expert's per-group buffer
+    expert_onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G,Tg,k,E)
+    flat = expert_onehot.reshape(g, tg * k, e)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(g, tg, k, e)
+    pos = jnp.sum(pos_in_expert * expert_onehot, axis=-1)           # (G,Tg,k)
+    keep = pos < capacity
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity + 1,
+                            dtype=x.dtype)[..., :capacity]          # (G,Tg,k,C)
+    disp = jnp.einsum("gtke,gtkc->gtec", expert_onehot.astype(x.dtype), pos_oh)
+    comb = jnp.einsum("gtk,gtke,gtkc->gtec",
+                      gate_vals.astype(x.dtype),
+                      expert_onehot.astype(x.dtype), pos_oh)
+
+    bax = pspec.batch_axis(g)
+    e_ax = pspec.model_axis(e)
+    xin = jnp.einsum("gtec,gtd->egcd", disp, xt)                    # (E,G,C,d)
+    # expert-sharded layout: the (data -> expert) reshard is MoE's all-to-all
+    xin = pspec.constrain(xin, P(e_ax, bax, None, None))
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xin, params["w_gate"]))
+        h = h * jnp.einsum("egcd,edf->egcf", xin, params["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xin, params["w_up"]))
+    h = pspec.constrain(h, P(e_ax, bax, None, None))
+    yout = jnp.einsum("egcf,efd->egcd", h, params["w_down"])        # (E,G,C,d)
+    yout = pspec.constrain(yout, P(e_ax, bax, None, None))
+    y = jnp.einsum("gtec,egcd->gtd", comb, yout).reshape(bsz, s, d)
+    y = pspec.constrain(y, P(bax, None, None))
+    return y, aux.astype(jnp.float32)

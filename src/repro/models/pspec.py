@@ -1,0 +1,59 @@
+"""Activation-sharding hints (MaxText-style with_sharding_constraint policy).
+
+Model code calls ``constrain(x, spec)`` at layer boundaries; the launcher
+installs the active mesh via ``set_mesh``. With no mesh installed (CPU unit
+tests) every call is a no-op, so the model code stays mesh-agnostic.
+
+This module is also the perf-iteration surface: SS Perf experiments flip
+specs here (e.g. sequence-sharded long-context activations) without touching
+model code.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_MESH = None
+
+
+def set_mesh(mesh) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def data_axes() -> Optional[Tuple[str, ...]]:
+    if _MESH is None:
+        return None
+    return tuple(a for a in ("pod", "data") if a in _MESH.axis_names)
+
+
+def batch_axis(b: int):
+    """The batch sharding axes, or None when b doesn't divide."""
+    if _MESH is None:
+        return None
+    dp = data_axes()
+    size = 1
+    for a in dp:
+        size *= _MESH.shape[a]
+    return dp if b % size == 0 else None
+
+
+def model_axis(dim: int):
+    """"model" when dim divides the model-axis size, else None."""
+    if _MESH is None:
+        return None
+    return "model" if dim % _MESH.shape["model"] == 0 else None
+
+
+def constrain(x, spec: P):
+    if _MESH is None:
+        return x
+    if all(e is None for e in spec):
+        return x   # no-op (also keeps shard_map Manual regions clean)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

@@ -1,0 +1,194 @@
+"""Mamba2 (SSD) block — chunked block-decomposition for training, O(1)-state
+recurrent step for decode (zamba2 hybrid + long-context shapes).
+
+Per head h with state (N x P):   (P = channels/head, N = ssm_state)
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t (N) outer x_t (P)
+    y_t = C_t . h_t + D * x_t
+Training uses the SSD chunk algorithm: quadratic within chunks of length
+``chunk``; a lax.scan carries the inter-chunk state. TPU-adaptation note
+(DESIGN.md Sec. 5): the chunk dimension is the MXU tile — all intra-chunk work
+is batched einsums; only the tiny (N x P) state crosses chunks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import pspec
+from repro.models.layers import dense_init, dtype_of
+
+CHUNK = 256
+
+
+def ssm_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = cfg.ssm_heads or max(d_in // 64, 1)
+    p = d_in // heads
+    return d_in, heads, p, cfg.ssm_state
+
+
+def init_mamba(rng, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, h, p, n = ssm_dims(cfg)
+    dt = dtype_of(cfg)
+    ks = jax.random.split(rng, 7)
+    conv_ch = d_in + 2 * n  # conv over (x, B, C) as in mamba2
+    # separate projections (not one fused in_proj): keeps every matmul's
+    # output dim cleanly shardable on the "model" mesh axis (DESIGN.md Sec. 4)
+    return {
+        "w_z": dense_init(ks[0], d, d_in, dt),
+        "w_x": dense_init(ks[1], d, d_in, dt),
+        "w_B": dense_init(ks[2], d, n, dt),
+        "w_C": dense_init(ks[3], d, n, dt),
+        "w_dt": dense_init(ks[4], d, h, dt),
+        "conv_w": (jax.random.normal(ks[5], (cfg.conv_width, conv_ch),
+                                     jnp.float32) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),       # a = -exp(a_log)
+        "dt_bias": jnp.full((h,), -2.0, jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "out_proj": dense_init(ks[6], d_in, d, dt),
+        "norm_z": jnp.ones((d_in,), jnp.float32),
+    }
+
+
+def _split_proj(cfg, params, xin):
+    z = xin @ params["w_z"]
+    x = xin @ params["w_x"]
+    b = xin @ params["w_B"]
+    c = xin @ params["w_C"]
+    dt_raw = xin @ params["w_dt"]
+    return z, x, b, c, dt_raw
+
+
+def _causal_conv(params, u, state=None):
+    """u: (B, S, C). Short causal conv, optionally seeded with carry state
+    (B, W-1, C) for decode. Returns (out, new_state)."""
+    w = params["conv_w"].astype(u.dtype)              # (W, C)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], width - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state.astype(u.dtype)
+    full = jnp.concatenate([pad, u], axis=1)
+    out = sum(full[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    out = jax.nn.silu(out + params["conv_b"].astype(u.dtype))
+    new_state = full[:, -(width - 1):, :]
+    return out, new_state
+
+
+def mamba_train(params, cfg: ModelConfig, xin):
+    """xin: (B, S, d) -> (B, S, d). S must be a multiple of CHUNK or < CHUNK."""
+    bsz, s, _ = xin.shape
+    d_in, h, p, n = ssm_dims(cfg)
+    chunk = min(CHUNK, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+
+    z, x, b, c, dt_raw = _split_proj(cfg, params, xin)
+    bax = pspec.batch_axis(bsz)
+    x = pspec.constrain(x, P(bax, None, pspec.model_axis(d_in)))
+    z = pspec.constrain(z, P(bax, None, pspec.model_axis(d_in)))
+    conv_in = jnp.concatenate([x, b, c], axis=-1)
+    conv_out, _ = _causal_conv(params, conv_in)
+    x, b, c = (conv_out[..., :d_in], conv_out[..., d_in:d_in + n],
+               conv_out[..., d_in + n:])
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])                      # (B,S,H)
+    a = -jnp.exp(params["a_log"])                                  # (H,)
+    log_decay = dt * a                                             # (B,S,H) <= 0
+
+    # reshape to chunks
+    hax = pspec.model_axis(h)
+    xc = x.reshape(bsz, nc, chunk, h, p).astype(jnp.float32)
+    xc = pspec.constrain(xc, P(bax, None, None, hax, None))
+    bc = b.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, chunk, n).astype(jnp.float32)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    ld = log_decay.reshape(bsz, nc, chunk, h)
+    lcum = jnp.cumsum(ld, axis=2)                                  # (B,nc,L,H)
+
+    # ---- intra-chunk (quadratic in chunk): mask exp(lcum_t - lcum_s) causal
+    rel = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]          # (B,nc,t,s,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    decay_mat = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("zltn,zlsn->zlts", cc, bc)                     # (B,nc,t,s)
+    gates = cb[..., None] * decay_mat                              # (B,nc,t,s,H)
+    gates = pspec.constrain(gates, P(bax, None, None, None, hax))
+    y_intra = jnp.einsum("zltsh,zlsh,zlshp->zlthp", gates, dtc, xc)
+    y_intra = pspec.constrain(y_intra, P(bax, None, None, hax, None))
+
+    # ---- chunk states and inter-chunk scan
+    tail = lcum[:, :, -1:, :] - lcum                               # (B,nc,L,H)
+    state_c = jnp.einsum("zlsh,zlsh,zlsn,zlshp->zlhnp",
+                         jnp.exp(tail), dtc, bc, xc)               # per-chunk
+    total = jnp.exp(lcum[:, :, -1, :])                             # (B,nc,H)
+
+    def carry_fn(hstate, inputs):
+        s_c, tot = inputs
+        y_state = hstate                                           # (B,H,N,P)
+        new = y_state * tot[:, :, None, None] + s_c
+        return new, y_state
+
+    h0 = jnp.zeros((bsz, h, n, p), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        carry_fn, h0,
+        (jnp.moveaxis(state_c, 1, 0), jnp.moveaxis(total, 1, 0)),
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                            # (B,nc,H,N,P)
+    y_inter = jnp.einsum("zltn,zlth,zlhnp->zlthp",
+                         cc, jnp.exp(lcum), h_prev)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * \
+        x.reshape(bsz, s, h, p).astype(jnp.float32)
+    y = y.reshape(bsz, s, d_in).astype(xin.dtype)
+    # gated RMSNorm (mamba2 norm before out_proj)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yf = y.astype(jnp.float32) * zf
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + 1e-6) * params["norm_z"]
+    return (yf.astype(xin.dtype)) @ params["out_proj"]
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    d_in, h, p, n = ssm_dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "h": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(params, cfg: ModelConfig, xin, cache):
+    """xin: (B, 1, d). Returns (y (B,1,d), new_cache)."""
+    bsz = xin.shape[0]
+    d_in, h, p, n = ssm_dims(cfg)
+    z, x, b, c, dt_raw = _split_proj(cfg, params, xin)
+    conv_in = jnp.concatenate([x, b, c], axis=-1)
+    conv_out, conv_state = _causal_conv(params, conv_in, cache["conv"])
+    x, b, c = (conv_out[..., :d_in], conv_out[..., d_in:d_in + n],
+               conv_out[..., d_in + n:])
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                        # (B,H)
+    xf = x[:, 0].reshape(bsz, h, p).astype(jnp.float32)
+    bf = b[:, 0].astype(jnp.float32)                               # (B,N)
+    cf = c[:, 0].astype(jnp.float32)
+    hstate = cache["h"] * decay[:, :, None, None] + jnp.einsum(
+        "zh,zn,zhp->zhnp", dt, bf, xf
+    )
+    y = jnp.einsum("zn,zhnp->zhp", cf, hstate)
+    y = y + params["d_skip"][None, :, None] * xf
+    y = y.reshape(bsz, 1, d_in)
+    zf = jax.nn.silu(z.astype(jnp.float32))
+    yf = y.astype(jnp.float32) * zf
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + 1e-6) * params["norm_z"]
+    out = yf.astype(xin.dtype) @ params["out_proj"]
+    return out, {"h": hstate, "conv": conv_state}

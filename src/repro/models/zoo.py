@@ -1,0 +1,352 @@
+"""Local model zoo for GAL organizations (paper Sec. 4.1 "model autonomy").
+
+Each organization may privately choose any model class F_m. The paper uses
+Linear / Gradient Boosting / SVM / CNN / LSTM; offline we provide:
+
+  * Linear          — closed-form ridge (ell_2) or Adam fit (other ell_q)
+  * MLP             — feature extractor + head (supports Interm fusion + DMS)
+  * StumpBoost      — gradient-boosted decision stumps (the paper's "GB")
+  * KernelRidge     — RBF kernel machine (stand-in for the paper's "SVM";
+                      same model-autonomy point, closed-form, no libsvm offline)
+  * ConvNet         — the paper's Table-8 CNN family (scaled) for patch images
+  * GRUNet          — recurrent net for the MIMIC-like time-series case study
+
+Interface (duck-typed, see Organization):
+  init(rng, x_example, k_out) -> params
+  fit(rng, x, r, local_loss)  -> params          (fresh fit to pseudo-residuals)
+  apply(params, x)            -> (N, K)
+Optionally for Interm fusion / DMS:
+  features(params, x) -> (N, H), feature_dim(x_example), init_head, apply_head
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Sequence, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import lq_loss
+from repro.optim.optimizers import adam, apply_updates
+from repro.utils.registry import Registry
+
+ZOO: Registry = Registry("local model")
+
+
+def _fit_adam(rng, params, loss_of_params, epochs: int, lr: float):
+    opt = adam(lr)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(carry, _):
+        params, state = carry
+        grads = jax.grad(loss_of_params)(params)
+        upd, state = opt.update(grads, state, params)
+        return (apply_updates(params, upd), state), None
+
+    (params, _), _ = jax.lax.scan(step, (params, state), None, length=epochs)
+    return params
+
+
+def _dense_init(rng, d_in, d_out, scale=None):
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(d_in)
+    kw, _ = jax.random.split(rng)
+    return {"w": jax.random.normal(kw, (d_in, d_out)) * scale,
+            "b": jnp.zeros((d_out,))}
+
+
+def _dense(params, x):
+    return x @ params["w"] + params["b"]
+
+
+@ZOO.register("linear")
+@dataclass(frozen=True)
+class Linear:
+    ridge: float = 1e-3
+    epochs: int = 100          # used only for non-ell_2 local losses
+    lr: float = 1e-2
+
+    def init(self, rng, x_example, k_out):
+        return _dense_init(rng, x_example.shape[-1], k_out)
+
+    def apply(self, params, x):
+        return _dense(params, x)
+
+    def fit(self, rng, x, r, local_loss):
+        q = getattr(local_loss, "q", 2.0)
+        if q == 2.0:
+            # closed-form ridge regression of residuals
+            n, d = x.shape
+            xb = jnp.concatenate([x, jnp.ones((n, 1))], axis=1)
+            gram = xb.T @ xb + self.ridge * jnp.eye(d + 1)
+            sol = jnp.linalg.solve(gram, xb.T @ r)
+            return {"w": sol[:-1], "b": sol[-1]}
+        params = self.init(rng, x, r.shape[-1])
+        return _fit_adam(
+            rng, params, lambda p: local_loss(r, _dense(p, x)), self.epochs, self.lr
+        )
+
+
+@ZOO.register("mlp")
+@dataclass(frozen=True)
+class MLP:
+    hidden: Sequence[int] = (64, 64)
+    epochs: int = 200
+    lr: float = 1e-2
+
+    def feature_dim(self, x_example):
+        return self.hidden[-1]
+
+    def init(self, rng, x_example, k_out):
+        dims = [x_example.shape[-1], *self.hidden]
+        keys = jax.random.split(rng, len(dims))
+        layers = [_dense_init(keys[i], dims[i], dims[i + 1])
+                  for i in range(len(dims) - 1)]
+        head = _dense_init(keys[-1], dims[-1], k_out)
+        return {"layers": layers, "head": head}
+
+    def features(self, params, x):
+        h = x
+        for lyr in params["layers"]:
+            h = jax.nn.relu(_dense(lyr, h))
+        return h
+
+    def init_head(self, rng, k_out):
+        return _dense_init(rng, self.hidden[-1], k_out)
+
+    def apply_head(self, head, h):
+        return _dense(head, h)
+
+    def apply(self, params, x):
+        return _dense(params["head"], self.features(params, x))
+
+    def fit(self, rng, x, r, local_loss):
+        params = self.init(rng, x, r.shape[-1])
+        return _fit_adam(
+            rng, params, lambda p: local_loss(r, self.apply(p, x)),
+            self.epochs, self.lr,
+        )
+
+
+@ZOO.register("stump_boost")
+@dataclass(frozen=True)
+class StumpBoost:
+    """Gradient-boosted decision stumps — the paper's "GB" local model.
+
+    Vectorized greedy stump selection over a per-feature quantile grid of
+    candidate thresholds; each stump fits the current residual-of-residual
+    with per-leaf means, shrunk by ``shrinkage``.
+    """
+    n_stumps: int = 50
+    n_thresholds: int = 16
+    shrinkage: float = 0.3
+
+    def init(self, rng, x_example, k_out):
+        d = x_example.shape[-1]
+        t = self.n_thresholds
+        return {
+            "thresholds": jnp.zeros((d, t)),
+            "feat": jnp.zeros((self.n_stumps,), jnp.int32),
+            "thr": jnp.zeros((self.n_stumps,)),
+            "left": jnp.zeros((self.n_stumps, k_out)),
+            "right": jnp.zeros((self.n_stumps, k_out)),
+            "base": jnp.zeros((k_out,)),
+        }
+
+    def fit(self, rng, x, r, local_loss):
+        del rng, local_loss  # stumps always fit ell_2 internally (classic GB)
+        n, d = x.shape
+        k = r.shape[-1]
+        qs = jnp.linspace(0.05, 0.95, self.n_thresholds)
+        thresholds = jnp.quantile(x, qs, axis=0).T            # (d, T)
+        base = jnp.mean(r, axis=0)
+        resid0 = r - base
+
+        masks = x[:, :, None] <= thresholds[None, :, :]        # (n, d, T)
+        masks_f = masks.astype(jnp.float32)
+        n_left = jnp.sum(masks_f, axis=0)                      # (d, T)
+        n_right = n - n_left
+
+        def one_stump(resid, _):
+            sum_left = jnp.einsum("ndt,nk->dtk", masks_f, resid)
+            sum_all = jnp.sum(resid, axis=0)                   # (k,)
+            sum_right = sum_all[None, None, :] - sum_left
+            mean_l = sum_left / jnp.maximum(n_left, 1.0)[..., None]
+            mean_r = sum_right / jnp.maximum(n_right, 1.0)[..., None]
+            # SSE reduction = sum_l . mean_l + sum_r . mean_r (up to const)
+            gain = (jnp.sum(sum_left * mean_l, axis=-1)
+                    + jnp.sum(sum_right * mean_r, axis=-1))    # (d, T)
+            idx = jnp.argmax(gain)
+            fi, ti = idx // self.n_thresholds, idx % self.n_thresholds
+            thr = thresholds[fi, ti]
+            lval = self.shrinkage * mean_l[fi, ti]
+            rval = self.shrinkage * mean_r[fi, ti]
+            go_left = (x[:, fi] <= thr)[:, None]
+            pred = jnp.where(go_left, lval[None, :], rval[None, :])
+            return resid - pred, (fi.astype(jnp.int32), thr, lval, rval)
+
+        _, (feat, thr, left, right) = jax.lax.scan(
+            one_stump, resid0, None, length=self.n_stumps
+        )
+        return {"thresholds": thresholds, "feat": feat, "thr": thr,
+                "left": left, "right": right, "base": base}
+
+    def apply(self, params, x):
+        def one(carry, stump):
+            fi, thr, lval, rval = stump
+            go_left = (x[:, fi] <= thr)[:, None]
+            return carry + jnp.where(go_left, lval[None, :], rval[None, :]), None
+
+        init = jnp.broadcast_to(params["base"], (x.shape[0], params["base"].shape[0]))
+        out, _ = jax.lax.scan(
+            one, init,
+            (params["feat"], params["thr"], params["left"], params["right"]),
+        )
+        return out
+
+
+@ZOO.register("kernel_ridge")
+@dataclass(frozen=True)
+class KernelRidge:
+    """RBF kernel ridge regression (the paper's "SVM" autonomy stand-in)."""
+    gamma: float = 0.5
+    reg: float = 1e-2
+
+    def init(self, rng, x_example, k_out):
+        return {"x_train": jnp.zeros((1, x_example.shape[-1])),
+                "alpha": jnp.zeros((1, k_out))}
+
+    def _kernel(self, a, b):
+        sq = (jnp.sum(a * a, -1)[:, None] + jnp.sum(b * b, -1)[None, :]
+              - 2.0 * a @ b.T)
+        return jnp.exp(-self.gamma * jnp.maximum(sq, 0.0))
+
+    def fit(self, rng, x, r, local_loss):
+        del rng, local_loss
+        k = self._kernel(x, x)
+        alpha = jnp.linalg.solve(k + self.reg * jnp.eye(x.shape[0]), r)
+        return {"x_train": x, "alpha": alpha}
+
+    def apply(self, params, x):
+        return self._kernel(x, params["x_train"]) @ params["alpha"]
+
+
+def _conv(params, x, stride=1):
+    # x: (N, H, W, C)
+    return jax.lax.conv_general_dilated(
+        x, params["w"], (stride, stride), "SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + params["b"]
+
+
+def _conv_init(rng, cin, cout, ksize=3):
+    scale = 1.0 / jnp.sqrt(ksize * ksize * cin)
+    return {"w": jax.random.normal(rng, (ksize, ksize, cin, cout)) * scale,
+            "b": jnp.zeros((cout,))}
+
+
+@ZOO.register("convnet")
+@dataclass(frozen=True)
+class ConvNet:
+    """Paper Table-8 CNN (conv+pool x4, GAP, linear), width-scaled for CPU."""
+    widths: Sequence[int] = (16, 32, 64, 64)
+    epochs: int = 60
+    lr: float = 1e-3
+    batch: int = 0  # 0 = full batch
+
+    def feature_dim(self, x_example):
+        return self.widths[-1]
+
+    def init(self, rng, x_example, k_out):
+        cin = x_example.shape[-1]
+        keys = jax.random.split(rng, len(self.widths) + 1)
+        convs = []
+        for i, w in enumerate(self.widths):
+            convs.append(_conv_init(keys[i], cin, w))
+            cin = w
+        head = _dense_init(keys[-1], self.widths[-1], k_out)
+        return {"convs": convs, "head": head}
+
+    def features(self, params, x):
+        h = x
+        for conv in params["convs"]:
+            h = jax.nn.relu(_conv(conv, h))
+            if h.shape[1] > 1:
+                h = jax.lax.reduce_window(
+                    h, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+                )
+        return jnp.mean(h, axis=(1, 2))  # global average pool
+
+    def init_head(self, rng, k_out):
+        return _dense_init(rng, self.widths[-1], k_out)
+
+    def apply_head(self, head, h):
+        return _dense(head, h)
+
+    def apply(self, params, x):
+        return _dense(params["head"], self.features(params, x))
+
+    def fit(self, rng, x, r, local_loss):
+        params = self.init(rng, x, r.shape[-1])
+        return _fit_adam(
+            rng, params, lambda p: local_loss(r, self.apply(p, x)),
+            self.epochs, self.lr,
+        )
+
+
+@ZOO.register("grunet")
+@dataclass(frozen=True)
+class GRUNet:
+    """GRU over (N, T, D) series + linear head (MIMIC-like case study)."""
+    hidden_size: int = 32
+    epochs: int = 120
+    lr: float = 3e-3
+
+    def feature_dim(self, x_example):
+        return self.hidden_size
+
+    def init(self, rng, x_example, k_out):
+        d = x_example.shape[-1]
+        h = self.hidden_size
+        k1, k2, k3 = jax.random.split(rng, 3)
+        return {
+            "wx": jax.random.normal(k1, (d, 3 * h)) / jnp.sqrt(d),
+            "wh": jax.random.normal(k2, (h, 3 * h)) / jnp.sqrt(h),
+            "b": jnp.zeros((3 * h,)),
+            "head": _dense_init(k3, h, k_out),
+        }
+
+    def features(self, params, x):
+        h0 = jnp.zeros((x.shape[0], self.hidden_size))
+
+        def cell(h, xt):
+            gates = xt @ params["wx"] + h @ params["wh"] + params["b"]
+            z, r_, n = jnp.split(gates, 3, axis=-1)
+            z, r_ = jax.nn.sigmoid(z), jax.nn.sigmoid(r_)
+            n = jnp.tanh(xt @ params["wx"][:, -self.hidden_size:]
+                         + r_ * (h @ params["wh"][:, -self.hidden_size:]))
+            return (1 - z) * n + z * h, None
+
+        h, _ = jax.lax.scan(cell, h0, jnp.swapaxes(x, 0, 1))
+        return h
+
+    def init_head(self, rng, k_out):
+        return _dense_init(rng, self.hidden_size, k_out)
+
+    def apply_head(self, head, h):
+        return _dense(head, h)
+
+    def apply(self, params, x):
+        return _dense(params["head"], self.features(params, x))
+
+    def fit(self, rng, x, r, local_loss):
+        params = self.init(rng, x, r.shape[-1])
+        return _fit_adam(
+            rng, params, lambda p: local_loss(r, self.apply(p, x)),
+            self.epochs, self.lr,
+        )
+
+
+def get_local_model(name: str, **kwargs):
+    return ZOO.get(name)(**kwargs)

@@ -1,0 +1,3 @@
+from repro.optim.optimizers import sgd, adam, adamw, apply_updates, Optimizer
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.lbfgs import scalar_lbfgs, golden_section

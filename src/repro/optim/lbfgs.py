@@ -1,0 +1,92 @@
+"""Scalar line-search optimizers for the gradient assisted learning rate.
+
+The paper line-searches eta with L-BFGS (Table 9, Fig. 4b/e). In 1-D, L-BFGS
+reduces exactly to the secant (memory-1 BFGS) iteration; we implement that with
+Armijo safeguarding plus a golden-section fallback used when the secant model
+is ill-conditioned. Everything is jit-compatible (lax loops only).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+_GOLD = 0.6180339887498949  # 1/phi
+
+
+def golden_section(fn, lo: float, hi: float, iters: int = 40):
+    """Minimize scalar fn over [lo, hi] by golden-section search."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+
+    def body(_, state):
+        a, b = state
+        d = _GOLD * (b - a)
+        x1 = b - d
+        x2 = a + d
+        f1, f2 = fn(x1), fn(x2)
+        a_new = jnp.where(f1 < f2, a, x1)
+        b_new = jnp.where(f1 < f2, x2, b)
+        return (a_new, b_new)
+
+    a, b = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    return 0.5 * (a + b)
+
+
+def _bracket(fn, x0: float = 1.0, grow: float = 2.0, iters: int = 12):
+    """Expand [0, x0] until fn stops decreasing at the right edge."""
+    x0 = jnp.asarray(x0, jnp.float32)
+
+    def body(_, state):
+        hi, f_hi = state
+        nhi = hi * grow
+        f_nhi = fn(nhi)
+        take = f_nhi < f_hi
+        return (jnp.where(take, nhi, hi), jnp.where(take, f_nhi, f_hi))
+
+    hi, _ = jax.lax.fori_loop(0, iters, body, (x0, fn(x0)))
+    return hi
+
+
+def scalar_lbfgs(fn, x0: float = 1.0, iters: int = 25, max_range: float = 64.0):
+    """1-D L-BFGS (secant) minimization of fn, Armijo-safeguarded.
+
+    Returns the minimizing scalar. fn must be differentiable (jax.grad-able).
+    """
+    g = jax.grad(fn)
+    x0 = jnp.asarray(x0, jnp.float32)
+
+    def body(_, state):
+        x_prev, g_prev, x, gx = state
+        denom = gx - g_prev
+        # secant Hessian estimate; fall back to unit step when degenerate
+        h = jnp.where(jnp.abs(denom) > 1e-12, (x - x_prev) / denom, 1.0)
+        h = jnp.clip(h, 1e-4, max_range)
+        step = -h * gx
+        x_new = jnp.clip(x + step, -max_range, max_range)
+        # Armijo halving (fixed 6 trials, branchless)
+        def armijo(_, xs):
+            x_try, = xs
+            worse = fn(x_try) > fn(x) + 1e-4 * gx * (x_try - x)
+            return (jnp.where(worse, 0.5 * (x_try + x), x_try),)
+
+        (x_new,) = jax.lax.fori_loop(0, 6, armijo, (x_new,))
+        return (x, gx, x_new, g(x_new))
+
+    x_prev = x0 - 0.5
+    state = (x_prev, g(x_prev), x0, g(x0))
+    state = jax.lax.fori_loop(0, iters, body, state)
+    return state[2]
+
+
+def line_search(fn, method: str = "lbfgs", x0: float = 1.0, iters: int = 25):
+    """Unified entry used by the GAL engine. method in {lbfgs, golden, constant}."""
+    if method == "constant":
+        return jnp.asarray(x0, jnp.float32)
+    if method == "golden":
+        hi = _bracket(fn, x0=jnp.maximum(x0, 1e-3))
+        return golden_section(fn, 0.0, hi, iters=max(iters, 40))
+    if method == "lbfgs":
+        return scalar_lbfgs(fn, x0=x0, iters=iters)
+    raise ValueError(f"unknown line-search method {method!r}")

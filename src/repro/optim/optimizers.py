@@ -1,0 +1,105 @@
+"""Functional optimizers (optax-style init/update pairs) in pure JAX.
+
+Built in-repo because the container ships no optax; the framework needs SGD
+(paper's local CNN fits), Adam (assistance-weight fits, Table 9) and AdamW
+(LM-scale local fits).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple]  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def _as_schedule(lr) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def sgd(lr, momentum: float = 0.0, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        mu = jax.tree_util.tree_map(jnp.zeros_like, params) if momentum else None
+        return {"step": jnp.zeros((), jnp.int32), "mu": mu}
+
+    def update(grads, state, params=None):
+        del params
+        step = state["step"]
+        lr_t = sched(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g, state["mu"], grads
+            )
+            if nesterov:
+                upd = jax.tree_util.tree_map(
+                    lambda m, g: -(lr_t) * (momentum * m + g), mu, grads
+                )
+            else:
+                upd = jax.tree_util.tree_map(lambda m: -(lr_t) * m, mu)
+            return upd, {"step": step + 1, "mu": mu}
+        upd = jax.tree_util.tree_map(lambda g: -(lr_t) * g, grads)
+        return upd, {"step": step + 1, "mu": None}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    """Adam; weight_decay here is *coupled* L2 (as torch.optim.Adam, used by the
+    paper's assistance-weight fit: lr 1e-1, wd 5e-4)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return {"step": jnp.zeros((), jnp.int32), "m": z,
+                "v": jax.tree_util.tree_map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = sched(step - 1)
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params
+            )
+        m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree_util.tree_map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g), state["v"], grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        upd = jax.tree_util.tree_map(
+            lambda m_, v_: -lr_t * (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps), m, v
+        )
+        return upd, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    """AdamW: decoupled weight decay (LM-scale local fits)."""
+    sched = _as_schedule(lr)
+    base = adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=0.0)
+
+    def update(grads, state, params):
+        upd, state = base.update(grads, state, params)
+        if weight_decay:
+            lr_t = sched(state["step"] - 1)
+            upd = jax.tree_util.tree_map(
+                lambda u, p: u - lr_t * weight_decay * p, upd, params
+            )
+        return upd, state
+
+    return Optimizer(base.init, update)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (callables step -> lr)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * (final_frac + (1 - final_frac) * cos)
+
+    return sched
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    cos = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def sched(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / max(warmup_steps, 1)
+        return jnp.where(step_f < warmup_steps, warm, cos(step - warmup_steps))
+
+    return sched
+
+
+def gal_theory_rate(t, a0: float = 1.0):
+    """Paper Thm 1 rate family: a_t with sum a_t = inf, sum a_t^2 < inf.
+
+    a_t = a0 / (t + 1) satisfies both; used in the convergence property tests.
+    """
+    return a0 / (jnp.asarray(t, jnp.float32) + 1.0)

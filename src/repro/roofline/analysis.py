@@ -1,0 +1,125 @@
+"""Roofline analysis from the compiled dry-run artifact (no real hardware).
+
+Three terms per (arch x shape x mesh), in seconds:
+    compute    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory     = HLO_bytes / (chips * HBM_bw)
+    collective = collective_bytes / (chips * link_bw)
+
+Sources: compiled.cost_analysis() for FLOPs/bytes; collective bytes parsed
+from the compiled HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute operand sizes). XLA's cost analysis of a
+GSPMD-partitioned module is per-partition, so terms divide by per-chip rates
+only — verified in tests/test_roofline.py.
+
+CAVEAT (scan trip counts): XLA's cost model counts a while-loop body ONCE.
+Layer-stacked models run L layers via lax.scan, so raw HLO FLOPs undercount
+by ~L. We report both the raw numbers and trip-count-corrected numbers using
+the known layer count (``scan_correction``), and cross-check against the
+analytic 6*N*D MODEL_FLOPS.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass(frozen=True)
+class Hardware:
+    name: str = "tpu-v5e"
+    peak_flops: float = 197e12          # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # bytes/s per chip
+    link_bw: float = 50e9               # bytes/s per ICI link
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64)"
+                       r"\[([0-9,]*)\]")
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?:\([^)]*\)\s*)?[a-z0-9\[\],{}\s]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.IGNORECASE)
+
+
+def _line_result_bytes(line: str) -> int:
+    """Sum the byte sizes of all shapes appearing before the op name
+    (the result shape(s) of the collective)."""
+    head = line.split("=", 1)
+    if len(head) != 2:
+        return 0
+    # result shapes live between '=' and the op call; operands after '('.
+    rhs = head[1]
+    op_pos = rhs.find("(")
+    result_part = rhs[:op_pos] if op_pos >= 0 else rhs
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(result_part):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes in the (per-partition) module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        kind = m.group(1).lower()
+        out[kind] = out.get(kind, 0) + _line_result_bytes(line)
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, train: bool = True) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for
+    inference forward (D = tokens processed)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch * 1       # decode: one token
+    return 2.0 * n * tokens
+
+
+def roofline_terms(cost: Dict[str, float], collectives: Dict[str, int],
+                   n_chips: int, hw: Hardware = HW,
+                   scan_correction: float = 1.0) -> Dict[str, float]:
+    """cost: compiled.cost_analysis() dict (per-partition module).
+    Returns the three terms in seconds plus raw inputs."""
+    flops = float(cost.get("flops", 0.0)) * scan_correction
+    bytes_acc = float(cost.get("bytes accessed", 0.0)) * scan_correction
+    coll = float(sum(collectives.values())) * scan_correction
+    return {
+        "hlo_flops_per_chip": flops,
+        "hlo_bytes_per_chip": bytes_acc,
+        "collective_bytes_per_chip": coll,
+        "t_compute": flops / hw.peak_flops,
+        "t_memory": bytes_acc / hw.hbm_bw,
+        "t_collective": coll / hw.link_bw,
+        "n_chips": n_chips,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    three = {k: terms[k] for k in ("t_compute", "t_memory", "t_collective")}
+    return max(three, key=three.get)

@@ -1,0 +1,4 @@
+from repro.train.steps import (
+    make_train_step, make_serve_step, make_prefill_step,
+    gal_residual_loss, lm_xent_loss, gal_residual_topk_loss,
+)

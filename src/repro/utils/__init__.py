@@ -1,0 +1,2 @@
+from repro.utils.pytree import tree_size, tree_bytes, tree_zeros_like, tree_add, tree_scale
+from repro.utils.registry import Registry

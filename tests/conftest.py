@@ -1,0 +1,23 @@
+import numpy as np
+import pytest
+import jax
+
+
+@pytest.fixture
+def rng_np():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """XLA-CPU's JIT accumulates dylib symbols across hundreds of
+    compilations and eventually fails with 'Failed to materialize symbols'
+    in long single-process runs; clearing compiled-function caches between
+    test modules keeps the full suite stable."""
+    yield
+    jax.clear_caches()

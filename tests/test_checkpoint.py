@@ -1,0 +1,38 @@
+"""Checkpoint round-trips + GAL round resumability."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import GALCheckpoint, load_pytree, save_pytree
+
+
+def test_pytree_roundtrip(tmp_path, key):
+    tree = {
+        "layers": [{"w": jax.random.normal(key, (4, 8)),
+                    "b": jnp.zeros((8,), jnp.bfloat16)}],
+        "step": jnp.asarray(7, jnp.int32),
+        "nested": {"a": (jnp.ones((2, 2)), jnp.arange(3))},
+    }
+    save_pytree(tmp_path / "ck.npz", tree)
+    loaded = load_pytree(tmp_path / "ck.npz", tree)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+
+
+def test_gal_round_checkpoint_resume(tmp_path, key):
+    ck = GALCheckpoint(tmp_path / "gal")
+    assert ck.latest_round() == -1
+    params_t0 = [{"w": jax.random.normal(key, (3, 2))}, {"w": jnp.ones((4, 2))}]
+    ck.save_round(0, eta=1.5, weights=jnp.asarray([0.25, 0.75]),
+                  org_params=params_t0)
+    ck.save_round(1, eta=0.8, weights=jnp.asarray([0.5, 0.5]),
+                  org_params=params_t0)
+    assert ck.latest_round() == 1
+    meta = ck.load_round_meta(1)
+    assert meta["eta"] == 0.8
+    restored = ck.load_org_params(0, 0, params_t0[0])
+    np.testing.assert_allclose(np.asarray(restored["w"]),
+                               np.asarray(params_t0[0]["w"]))

@@ -1,0 +1,84 @@
+"""Data pipeline invariants (vertical partitioning is the paper's setting)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.data.partition import (
+    flatten_for_tabular, split_channels, split_features, split_image_patches,
+)
+from repro.data.synthetic import (
+    make_blobs, make_classification, make_multimodal_series,
+    make_patch_images, make_regression, train_test_split,
+)
+from repro.data.tokens import make_token_stream, token_batches
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(4, 40), m=st.sampled_from([2, 4]))
+def test_split_features_disjoint_and_complete(d, m):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, d)).astype(np.float32))
+    parts = split_features(x, m)
+    assert len(parts) == m
+    assert sum(p.shape[-1] for p in parts) == d
+    # contiguous split: concatenation reproduces x
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, -1)),
+                               np.asarray(x))
+
+
+@pytest.mark.parametrize("m,grid", [(2, (1, 2)), (4, (2, 2)), (8, (2, 4)),
+                                    (12, (3, 4))])
+def test_split_image_patches_geometry(m, grid):
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 24, 24, 3)).astype(np.float32))
+    parts = split_image_patches(x, m)
+    gh, gw = grid
+    assert len(parts) == m
+    assert parts[0].shape == (4, 24 // gh, 24 // gw, 3)
+    flat = flatten_for_tabular(parts)
+    assert flat[0].shape == (4, (24 // gh) * (24 // gw) * 3)
+
+
+def test_split_channels_roundtrip():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((4, 8, 22)).astype(np.float32))
+    parts = split_channels(x, (6, 4, 8, 4))
+    assert [p.shape[-1] for p in parts] == [6, 4, 8, 4]
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(parts, -1)),
+                               np.asarray(x))
+    with pytest.raises(ValueError):
+        split_channels(x, (6, 4, 8, 5))
+
+
+def test_generators_shapes_and_labels():
+    rng = np.random.default_rng(0)
+    ds = make_regression(rng, n=50, d=7)
+    assert ds.x.shape == (50, 7) and ds.y.shape == (50, 1)
+    ds = make_blobs(rng, n=40, d=5, k=3)
+    assert ds.y.shape == (40, 3)
+    np.testing.assert_allclose(np.asarray(ds.y.sum(-1)), 1.0)
+    ds = make_classification(rng, n=60, d=9, k=2)
+    assert set(np.asarray(ds.y.argmax(-1))) <= {0, 1}
+    ds = make_patch_images(rng, n=10, size=8, k=4)
+    assert ds.x.shape == (10, 8, 8, 1)
+    ds = make_multimodal_series(rng, n=16, t=5, task="binary")
+    assert ds.x.shape == (16, 5, 22)
+    assert float(ds.y.mean()) < 0.5     # imbalanced (MIMICM-like)
+
+
+def test_train_test_split_disjoint():
+    rng = np.random.default_rng(0)
+    ds = make_regression(rng, n=100, d=4)
+    tr, te = train_test_split(ds, rng, test_frac=0.25)
+    assert tr.x.shape[0] == 75 and te.x.shape[0] == 25
+
+
+def test_token_stream_learnable_structure():
+    rng = np.random.default_rng(0)
+    stream = make_token_stream(rng, vocab=64, length=5000)
+    assert stream.min() >= 0 and stream.max() < 64
+    toks, labs = next(token_batches(stream, 4, 16, rng))
+    assert toks.shape == labs.shape == (4, 16)
+    # labels are next tokens
+    np.testing.assert_array_equal(toks[:, 1:], labs[:, :-1])

@@ -1,0 +1,51 @@
+"""Centralized fusion baselines (paper's 'Interm' and 'Late' upper bounds)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion, gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_blobs, make_regression, train_test_split
+from repro.metrics.metrics import accuracy, mad
+from repro.models.zoo import MLP, Linear
+
+
+def test_late_fusion_trains_and_predicts(rng_np, key):
+    ds = make_regression(rng_np, n=300, d=12)
+    tr, te = train_test_split(ds, rng_np)
+    xs, xs_te = split_features(tr.x, 4), split_features(te.x, 4)
+    res = fusion.fit_late(key, xs, tr.y, get_loss("mse"), Linear(),
+                          epochs=300, lr=3e-2)
+    pred = res.predict(xs_te)
+    assert pred.shape == te.y.shape
+    # centralized late fusion should beat a single-org linear fit
+    assert float(mad(te.y, pred)) < float(mad(te.y, jnp.zeros_like(te.y)))
+
+
+def test_interm_fusion_deep_models(rng_np, key):
+    ds = make_blobs(rng_np, n=160, d=12, k=4)
+    tr, te = train_test_split(ds, rng_np)
+    xs, xs_te = split_features(tr.x, 4), split_features(te.x, 4)
+    res = fusion.fit_interm(key, xs, tr.y, get_loss("xent"),
+                            MLP((16,)), epochs=300, lr=1e-2)
+    pred = res.predict(xs_te)
+    acc = float(accuracy(te.y, pred))
+    assert acc > 50.0, acc
+
+
+def test_gal_close_to_late_fusion(rng_np, key):
+    """Paper Sec 4.1: GAL performs close to the centralized baselines."""
+    ds = make_regression(rng_np, n=400, d=12)
+    tr, te = train_test_split(ds, rng_np)
+    xs, xs_te = split_features(tr.x, 4), split_features(te.x, 4)
+    loss = get_loss("mse")
+    late = fusion.fit_late(key, xs, tr.y, loss, Linear(), epochs=400, lr=3e-2)
+    late_mad = float(mad(te.y, late.predict(xs_te)))
+    res = gal.fit(key, make_orgs(xs, Linear()), tr.y, loss, GALConfig(rounds=6),
+                  eval_sets={"test": (xs_te, te.y)}, metric_fn=mad)
+    gal_mad = res.history["test_metric"][-1]
+    assert gal_mad < late_mad * 1.5, (gal_mad, late_mad)

@@ -1,0 +1,101 @@
+"""Hypothesis property tests on system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import (
+    BCELoss, CrossEntropyLoss, MAELoss, MSELoss, lq_loss,
+)
+from repro.core.weights import fit_weights
+from repro.core.protocol_sim import al_cost, gal_cost
+from repro.optim.lbfgs import golden_section, line_search, scalar_lbfgs
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(2, 64), k=st.integers(1, 8), seed=st.integers(0, 999))
+def test_residual_is_negative_gradient(n, k, seed):
+    """r = -dL/dF for every loss (the definition in Alg. 1)."""
+    key = jax.random.PRNGKey(seed)
+    f = jax.random.normal(key, (n, k))
+    for loss in (MSELoss(), CrossEntropyLoss()):
+        if isinstance(loss, CrossEntropyLoss):
+            y = jax.nn.one_hot(jax.random.randint(key, (n,), 0, k), k)
+        else:
+            y = jax.random.normal(jax.random.fold_in(key, 1), (n, k))
+        analytic = loss.residual(y, f)
+        autodiff = -jax.grad(lambda ff: jnp.sum(loss.per_sample(y, ff)))(f)
+        np.testing.assert_allclose(np.asarray(analytic), np.asarray(autodiff),
+                                   atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 999), m=st.integers(2, 6))
+def test_weights_live_on_simplex(seed, m):
+    key = jax.random.PRNGKey(seed)
+    r = jax.random.normal(key, (32, 3))
+    preds = jax.random.normal(jax.random.fold_in(key, 1), (m, 32, 3))
+    w = fit_weights(key, r, preds, lq_loss(2.0), epochs=20)
+    w = np.asarray(w)
+    assert np.all(w >= 0)
+    np.testing.assert_allclose(w.sum(), 1.0, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(a=st.floats(-5, 5), b=st.floats(0.1, 10.0))
+def test_scalar_minimizers_find_quadratic_minimum(a, b):
+    fn = lambda x: b * (x - a) ** 2 + 1.0
+    for result in (scalar_lbfgs(fn, x0=0.5), ):
+        assert abs(float(result) - a) < 0.05, (float(result), a)
+    g = golden_section(fn, a - 3, a + 3, iters=50)
+    assert abs(float(g) - a) < 0.01
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 256), k=st.integers(1, 32), m=st.integers(2, 12),
+       rounds=st.integers(1, 20))
+def test_protocol_complexity_relations(n, k, m, rounds):
+    """Paper Table 14: AL costs M x the communication rounds and sequential
+    fits of GAL at equal ensemble size."""
+    g = gal_cost(n, k, m, rounds)
+    a = al_cost(n, k, m, rounds)
+    assert a.ensemble_members == g.ensemble_members
+    assert a.comm_rounds == m * g.comm_rounds
+    assert a.sequential_fits == m * g.sequential_fits
+    assert g.bytes_broadcast < a.bytes_broadcast
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99), q=st.sampled_from([1.0, 1.5, 2.0, 4.0]))
+def test_lq_loss_nonnegative_and_zero_at_fit(seed, q):
+    key = jax.random.PRNGKey(seed)
+    r = jax.random.normal(key, (16, 4))
+    assert float(lq_loss(q)(r, r)) < 1e-6
+    f = r + 0.5
+    assert float(lq_loss(q)(r, f)) > 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 99))
+def test_bce_residual_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    y = (jax.random.uniform(key, (32, 1)) > 0.5).astype(jnp.float32)
+    f = jax.random.normal(jax.random.fold_in(key, 1), (32, 1)) * 4
+    r = BCELoss().residual(y, f)
+    assert float(jnp.max(jnp.abs(r))) <= 1.0
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 99), b=st.integers(1, 3), s=st.integers(2, 24))
+def test_moe_capacity_preserves_token_mass(seed, b, s):
+    """Dropped-token gates are zeroed; kept gates renormalized <= 1."""
+    from repro.configs import get_arch
+    from repro.models.moe import apply_moe, init_moe
+    cfg = get_arch("phi3.5-moe-42b-a6.6b", smoke=True)
+    key = jax.random.PRNGKey(seed)
+    params = init_moe(key, cfg)
+    x = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32)
+    y, aux = apply_moe(params, cfg, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux))
+    assert not bool(jnp.any(jnp.isnan(y)))

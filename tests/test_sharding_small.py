@@ -1,0 +1,79 @@
+"""Sharding policy on a small in-process device mesh.
+
+These tests run in a subprocess with XLA_FLAGS forcing 8 host devices (jax
+locks the device count on first init — the main test process must stay at 1
+device so the rest of the suite sees a normal CPU).
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+
+    from repro.configs import get_arch
+    from repro.launch import sharding as shd
+    from repro.launch.mesh import make_test_mesh
+    from repro.launch.specs import abstract_params, train_batch_specs
+    from repro.configs.base import SHAPES, InputShape
+    from repro.models import pspec as act_hints
+    from repro.models import transformer as tfm
+    from repro.train.steps import make_train_step
+
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    act_hints.set_mesh(mesh)
+    cfg = get_arch("llama3-8b", smoke=True)
+
+    # real (not abstract) run: init sharded params, run one train step
+    params = tfm.init_params(jax.random.PRNGKey(0), cfg)
+    p_sh = shd.params_shardings(cfg, mesh, params)
+    params = jax.device_put(params, p_sh)
+    step, opt = make_train_step(cfg, "lm_xent", lr=1e-3)
+    opt_state = opt.init(params)
+    batch = {
+        "tokens": jnp.zeros((8, 32), jnp.int32),
+        "labels": jnp.zeros((8, 32), jnp.int32),
+    }
+    b_sh = shd.batch_shardings(cfg, mesh, {
+        k: jax.ShapeDtypeStruct(v.shape, v.dtype) for k, v in batch.items()})
+    batch = {k: jax.device_put(v, b_sh[k]) for k, v in batch.items()}
+    with mesh:
+        params2, opt_state, metrics = jax.jit(step)(params, opt_state, batch)
+    out = {
+        "loss": float(metrics["loss"]),
+        "n_devices": len(jax.devices()),
+        "wq_sharded": str(
+            jax.tree_util.tree_leaves(params2)[0].sharding is not None),
+    }
+    # params stay distributed through the step: every big weight remains
+    # sharded (not replicated) even though XLA may re-express the sharding
+    flat_out = jax.tree_util.tree_flatten_with_path(params2)[0]
+    big = [l for _, l in flat_out if l.size >= 64 * 64]
+    out["shardings_preserved"] = all(
+        not l.sharding.is_fully_replicated for l in big)
+    print("RESULT:" + json.dumps(out))
+""")
+
+
+@pytest.mark.slow
+def test_real_sharded_train_step_on_8_devices():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=540)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    out = json.loads(line[len("RESULT:"):])
+    assert out["n_devices"] == 8
+    assert out["shardings_preserved"]
+    import math
+    assert math.isfinite(out["loss"])
