@@ -49,6 +49,47 @@ def micro_benchmarks() -> None:
     print(f"eta_line_search_lbfgs,{t_ls:.1f},scalar")
 
 
+def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
+                         d: int = 16) -> None:
+    """rounds/sec of gal.fit: fused scan engine vs legacy Python engine, plus
+    the stacked-round prediction stage vs the per-(round, org) loop. Timings
+    include compilation — one fit call is the real unit of work."""
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import pad_and_stack, split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import Linear
+
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    ds = make_regression(rng_np, n=n, d=d)
+    train, test = train_test_split(ds, rng_np)
+    xs = split_features(train.x, m)
+    xs_te = split_features(test.x, m)
+    loss = get_loss("mse")
+
+    results = {}
+    for engine in ("python", "scan"):
+        cfg = GALConfig(rounds=rounds, engine=engine)
+        t0 = time.perf_counter()
+        res = gal.fit(key, make_orgs(xs, Linear()), train.y, loss, cfg)
+        dt = time.perf_counter() - t0
+        results[engine] = res
+        rps = rounds / dt
+        print(f"gal_fit_{engine}_R{rounds}_M{m},{dt / rounds * 1e6:.1f},"
+              f"rounds_per_sec={rps:.2f}")
+
+    res = results["scan"]
+    t_pred = _time_call(jax.jit(lambda xq: res.predict(xq)), xs_te)
+    print(f"gal_predict_stacked_R{rounds}_M{m},{t_pred:.1f},one-vmap")
+    res.unpack_to_orgs()
+    xe_stack, _ = pad_and_stack(xs_te, pad_to=res.pad_to)
+    t_leg = _time_call(lambda: res.predict_legacy(list(xe_stack)))
+    print(f"gal_predict_legacy_R{rounds}_M{m},{t_leg:.1f},per-round-org-loop")
+
+
 def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
     """Summarize the dry-run artifacts into the SS Roofline table."""
     rows = []
@@ -91,6 +132,10 @@ def main() -> None:
 
     print("\n# microbenchmarks: name,us_per_call,derived")
     micro_benchmarks()
+
+    print("\n# gal engine: fused scan vs legacy python (name,us_per_round,"
+          "derived)")
+    gal_engine_benchmark()
 
     print("\n# roofline table (from dry-run artifacts)")
     roofline_summary()

@@ -1,0 +1,269 @@
+"""Fused, scan-compiled GAL round engine (paper Algorithm 1, fast path).
+
+The reference engine in ``repro.core.gal`` executes Algorithm 1 as a Python
+loop: every round pays M Python dispatches for the local fits, a re-traced
+line search, and several ``float()`` host round-trips for history keeping.
+This module compiles the whole assistance stage into ONE device program for
+the homogeneous-organization case (every org: same model class/config, same
+local loss, tabular slices of a shared sample axis, no DMS, no output noise):
+
+  * the per-org residual fits of round t are ``jax.vmap``-ed over org-stacked
+    inputs ``(M, N, d_max)`` (vertical slices zero-padded to a common width —
+    inert for the zoo models, see ``repro.data.partition.pad_and_stack``);
+  * one round (residual -> privacy -> fits -> assistance weights -> eta
+    line-search -> ensemble update -> eval bookkeeping) is a single traced
+    step function;
+  * the T-round loop is ``jax.lax.scan`` over that step, with etas, weights,
+    per-round params and the loss/metric history materialized device-side.
+
+The ONLY host synchronization is a single ``jax.device_get`` of the scalar
+bundle after the scan returns — matching GAL's communication structure
+(orgs are parallel within a round; rounds are sequential).
+
+RNG discipline replicates the reference engine exactly (split per round;
+``fold_in(k_round, 13)`` privacy, ``fold_in(k_round, org.index)`` per-org fit,
+``fold_in(k_round, 29)`` weight fit), so for deterministic local models
+(ridge / kernel ridge / stumps) the two engines agree to float tolerance.
+
+Early stopping (``eta_stop_threshold``) cannot break a ``lax.scan``; instead
+rounds after the threshold crossing are masked (eta forced to 0, ensemble
+frozen) and trimmed from the returned history on the host side.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.losses import Loss, lq_loss
+from repro.core.privacy import apply_privacy
+from repro.core.weights import fit_weights, uniform_weights
+from repro.data.partition import pad_and_stack
+from repro.optim.lbfgs import line_search
+
+
+def scan_compatible(orgs: Sequence[Any],
+                    eval_sets: Optional[Dict[str, tuple]] = None) -> bool:
+    """True when the fused vmap/scan fast path can run these organizations.
+
+    Requirements: no Deep Model Sharing, no output noise (its prediction-stage
+    noise keys are Python-``hash``-derived, untraceable), one shared scan-safe
+    model config, one shared local ell_q, and org inputs that stack — rank-2
+    slices over a common sample axis (padded) or identical higher-rank shapes.
+    """
+    if not orgs:
+        return False
+    first = orgs[0]
+    for org in orgs:
+        if not getattr(org, "scan_safe", False):
+            return False
+        if type(org.model) is not type(first.model) or org.model != first.model:
+            return False
+        if getattr(org.local_loss, "q", None) is None:
+            return False
+        if getattr(org.local_loss, "q") != getattr(first.local_loss, "q"):
+            return False
+    xs = [org.x_train for org in orgs]
+    if not all(hasattr(x, "ndim") and hasattr(x, "shape") for x in xs):
+        return False
+    if any(x.ndim != xs[0].ndim or x.shape[0] != xs[0].shape[0] for x in xs):
+        return False
+    if xs[0].ndim != 2 and any(x.shape != xs[0].shape for x in xs):
+        return False
+    if xs[0].ndim == 2 and len({int(x.shape[-1]) for x in xs}) > 1:
+        # unequal slices need zero-padding; randomly-initialized fits (MLP,
+        # ConvNet, GRUNet, Linear q!=2) init params at the padded width, so
+        # their draws — and hence auto-mode results — would silently differ
+        # from the reference engine. Only pad-invariant fits stay eligible.
+        inv = getattr(first.model, "pad_invariant", False)
+        if callable(inv):
+            inv = inv(getattr(first.local_loss, "q"))
+        if not inv:
+            return False
+    if eval_sets:
+        train_dims = [int(x.shape[-1]) for x in xs]
+        for xs_e, _ in eval_sets.values():
+            if len(xs_e) != len(orgs):
+                return False
+            if any(x.ndim != xs[0].ndim for x in xs_e):
+                return False
+            if any(x.shape[0] != xs_e[0].shape[0] for x in xs_e):
+                return False
+            if xs[0].ndim == 2:
+                # org m's model is fit on train_dims[m] features; eval slices
+                # must match per-org widths or the apply is semantically wrong
+                if [int(x.shape[-1]) for x in xs_e] != train_dims:
+                    return False
+            elif any(x.shape[1:] != xs[0].shape[1:] for x in xs_e):
+                return False
+    return True
+
+
+def metric_traceable(metric_fn: Callable,
+                     eval_sets: Dict[str, tuple]) -> bool:
+    """True when metric_fn traces cleanly over abstract (y_e, f) values.
+
+    The fast path evaluates metric_fn under jit inside the scanned round
+    step; ``engine="auto"`` probes it with ``jax.eval_shape`` first and
+    falls back to the Python engine for host-side metrics (``float(...)``,
+    numpy/sklearn calls) instead of crashing mid-trace.
+    """
+    try:
+        for _, y_e in eval_sets.values():
+            f_spec = jax.ShapeDtypeStruct((y_e.shape[0], y_e.shape[-1]),
+                                          jnp.float32)
+            y_spec = jax.ShapeDtypeStruct(y_e.shape, y_e.dtype)
+            jax.eval_shape(metric_fn, y_spec, f_spec)
+        return True
+    except Exception:
+        return False
+
+
+def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
+             config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
+             metric_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """Run Algorithm 1 as one jitted scan; see the module docstring.
+
+    Returns a dict with device-side stacked per-round ``params`` (leaves
+    ``(T_valid, M, ...)``), host lists ``etas`` / ``weights``, the ``history``
+    dict of Python floats, the padded input width ``pad_to`` and per-org
+    slice widths ``dims`` (both needed to stack prediction-stage inputs).
+    """
+    m = len(orgs)
+    model = orgs[0].model
+    local_loss = orgs[0].local_loss
+    n, k = y.shape[0], y.shape[-1]
+    alice_loss = lq_loss(config.alice_q)
+    masked = config.eta_stop_threshold > 0.0
+
+    x_stack, dims = pad_and_stack([org.x_train for org in orgs])
+    pad_to = int(x_stack.shape[-1]) if x_stack.ndim == 3 else None
+    org_ids = jnp.asarray([org.index for org in orgs], jnp.uint32)
+    eval_stacks = {}
+    if eval_sets:
+        for name, (xs_e, y_e) in eval_sets.items():
+            xe_stack, _ = pad_and_stack(list(xs_e), pad_to=pad_to)
+            eval_stacks[name] = (xe_stack, y_e)
+
+    def run(key, y_in, x_in, evals_in):
+        def round_step(carry, _):
+            f, f_evals, key, active = carry
+            key, k_round = jax.random.split(key)
+            # 1. pseudo-residual  2. privatized broadcast
+            residual = loss.residual(y_in, f)
+            r_bcast = apply_privacy(
+                jax.random.fold_in(k_round, 13), residual, config.privacy,
+                alpha=config.privacy_alpha,
+                n_intervals=config.privacy_intervals,
+            )
+
+            # 3. parallel local fits: one model vmapped over the org stack
+            def fit_one(key_m, x_m):
+                params = model.fit(key_m, x_m, r_bcast, local_loss)
+                return params, model.apply(params, x_m)
+
+            org_keys = jax.vmap(
+                lambda i: jax.random.fold_in(k_round, i))(org_ids)
+            params_t, preds = jax.vmap(fit_one)(org_keys, x_in)  # (M, N, K)
+
+            # 4. gradient assistance weights
+            if config.use_weights and m > 1:
+                w = fit_weights(
+                    jax.random.fold_in(k_round, 29), residual, preds,
+                    alice_loss, epochs=config.weight_epochs,
+                    lr=config.weight_lr, weight_decay=config.weight_decay,
+                )
+            else:
+                w = uniform_weights(m)
+            direction = jnp.einsum("m,mnk->nk", w, preds)
+
+            # 5. line-search eta   6. masked ensemble update
+            eta = line_search(
+                lambda e: loss(y_in, f + e * direction),
+                method=config.eta_method, x0=config.eta0,
+            )
+            eta_eff = jnp.where(active, eta, 0.0) if masked else eta
+            f_new = f + eta_eff * direction
+
+            outs = {"params": params_t, "eta": eta_eff, "w": w,
+                    "valid": active, "train_loss": loss(y_in, f_new)}
+            new_evals = {}
+            for name, (xe_stack, y_e) in evals_in.items():
+                preds_e = jax.vmap(model.apply)(params_t, xe_stack)
+                fe = (f_evals[name]
+                      + eta_eff * jnp.einsum("m,mnk->nk", w, preds_e))
+                new_evals[name] = fe
+                outs[f"{name}_loss"] = loss(y_e, fe)
+                if metric_fn is not None:
+                    outs[f"{name}_metric"] = metric_fn(y_e, fe)
+            new_active = (active & (jnp.abs(eta) >= config.eta_stop_threshold)
+                          if masked else active)
+            return (f_new, new_evals, key, new_active), outs
+
+        f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
+        f_evals = {
+            name: jnp.broadcast_to(loss.init_prediction(y_in), (y_e.shape[0], k))
+            for name, (_, y_e) in evals_in.items()
+        }
+        init = {"train_loss": loss(y_in, f)}
+        for name, (_, y_e) in evals_in.items():
+            init[f"{name}_loss"] = loss(y_e, f_evals[name])
+            if metric_fn is not None:
+                init[f"{name}_metric"] = metric_fn(y_e, f_evals[name])
+        carry0 = (f, f_evals, key, jnp.asarray(True))
+        _, outs = jax.lax.scan(round_step, carry0, None, length=config.rounds)
+        return outs, init
+
+    outs, init = jax.jit(run)(rng, y, x_stack, eval_stacks)
+    params_stacked = outs.pop("params")           # stays on device
+    scalars, init = jax.device_get((outs, init))  # the ONE host sync
+
+    n_valid = int(scalars["valid"].sum()) if masked else config.rounds
+    history = {"train_loss": [float(init["train_loss"])]
+               + [float(v) for v in scalars["train_loss"][:n_valid]]}
+    for name in eval_stacks:
+        for kind in ("loss", "metric"):
+            col = f"{name}_{kind}"
+            if col in scalars:
+                history[col] = [float(init[col])] + [
+                    float(v) for v in scalars[col][:n_valid]]
+    return {
+        "params": jax.tree_util.tree_map(lambda l: l[:n_valid], params_stacked),
+        "etas": [float(e) for e in scalars["eta"][:n_valid]],
+        "weights": [jnp.asarray(w) for w in scalars["w"][:n_valid]],
+        "history": history,
+        "dims": dims,
+        "pad_to": pad_to,
+    }
+
+
+def stacked_predict(model: Any, stacked_params: Any, etas: Sequence[float],
+                    weights: Sequence[jnp.ndarray], f0: jnp.ndarray,
+                    xs: Sequence[jnp.ndarray], pad_to: Optional[int],
+                    t_max: int,
+                    org_dims: Optional[Sequence[int]] = None) -> jnp.ndarray:
+    """Prediction stage as ONE vmap over (rounds x orgs).
+
+    F^T(x*) = F^0 + sum_t eta^t sum_m w^t_m f^t_m(x*_m), with the (T, M)
+    ensemble applied by a nested vmap and contracted in a single einsum —
+    no per-(round, org) Python dispatch.
+    """
+    if org_dims is not None and xs[0].ndim == 2:
+        # the zero-pad would silently swallow mis-sized/mis-ordered slices
+        # that the reference engine rejects with a shape error — keep that net
+        got = [int(x.shape[-1]) for x in xs]
+        if got != list(org_dims):
+            raise ValueError(
+                f"prediction slice widths {got} do not match the fitted "
+                f"per-org widths {list(org_dims)} (check org order)")
+    n = xs[0].shape[0]
+    f = jnp.broadcast_to(f0, (n, f0.shape[-1]))
+    if t_max == 0:
+        return f
+    x_stack, _ = pad_and_stack(list(xs), pad_to=pad_to)
+    params_t = jax.tree_util.tree_map(lambda l: l[:t_max], stacked_params)
+    preds = jax.vmap(lambda p: jax.vmap(model.apply)(p, x_stack))(params_t)
+    etas_t = jnp.asarray(etas[:t_max], jnp.float32)
+    w_t = jnp.stack(list(weights[:t_max]))
+    return f + jnp.einsum("t,tm,tmnk->nk", etas_t, w_t, preds)

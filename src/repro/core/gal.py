@@ -9,6 +9,19 @@ Per assistance round t:
   6. F^t = F^{t-1} + eta-hat * sum_m w-hat_m f_m^t
 
 Prediction stage: F^T(x*) = F^0 + sum_t eta^t sum_m w_m^t f_m^t(x_m*).
+
+Two executions of the same algorithm live here:
+
+  * the **scan fast path** (``repro.core.engine``): homogeneous orgs are
+    vmapped over stacked slices and the T-round loop is one jitted
+    ``lax.scan`` with a single host sync per ``fit`` — selected automatically
+    (``GALConfig.engine="auto"``) whenever every org shares a scan-safe model
+    config; per-round params come back as a stacked pytree so ``predict`` is
+    one vmap over (rounds x orgs);
+  * the **Python reference path**: per-org dispatch in interpreter order,
+    kept as the fallback for heterogeneous model-autonomy scenarios, Deep
+    Model Sharing, noisy orgs, and non-traceable metrics
+    (``GALConfig.engine="python"`` forces it).
 """
 from __future__ import annotations
 
@@ -18,6 +31,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine as engine_mod
 from repro.core.losses import Loss, lq_loss
 from repro.core.organizations import Organization
 from repro.core.privacy import apply_privacy
@@ -43,6 +57,11 @@ class GALConfig:
     privacy: Optional[str] = None      # None | dp | ip
     privacy_alpha: float = 1.0
     privacy_intervals: int = 1
+    # engine selection: "auto" takes the fused scan path when the orgs are
+    # homogeneous (see engine.scan_compatible); "python" forces the reference
+    # loop; "scan" forces the fast path (raises when incompatible). NOTE the
+    # scan path traces metric_fn — it must be jax-traceable there.
+    engine: str = "auto"               # auto | scan | python
 
 
 @dataclass
@@ -53,6 +72,14 @@ class GALResult:
     etas: List[float] = field(default_factory=list)
     weights: List[jnp.ndarray] = field(default_factory=list)
     history: Dict[str, List[float]] = field(default_factory=dict)
+    # scan fast path extras: per-round params as ONE stacked pytree with
+    # leaves (T, M, ...), the shared model that applies them, and the padded
+    # input geometry needed to stack prediction-stage slices.
+    stacked_params: Any = None
+    model: Any = None
+    org_dims: Optional[List[int]] = None
+    pad_to: Optional[int] = None
+    engine: str = "python"
 
     @property
     def rounds(self) -> int:
@@ -60,7 +87,25 @@ class GALResult:
 
     def predict(self, xs: Sequence[jnp.ndarray], rounds: Optional[int] = None
                 ) -> jnp.ndarray:
-        """Prediction stage: assemble org outputs for new data xs[m]."""
+        """Prediction stage: assemble org outputs for new data xs[m].
+
+        Fast-path results evaluate the whole (rounds x orgs) ensemble with a
+        nested vmap + one einsum; reference results loop per (round, org).
+        """
+        t_max = self.rounds if rounds is None else min(rounds, self.rounds)
+        if self.stacked_params is not None:
+            return engine_mod.stacked_predict(
+                self.model, self.stacked_params, self.etas, self.weights,
+                self.f0, xs, self.pad_to, t_max, org_dims=self.org_dims,
+            )
+        return self.predict_legacy(xs, rounds)
+
+    def predict_legacy(self, xs: Sequence[jnp.ndarray],
+                       rounds: Optional[int] = None) -> jnp.ndarray:
+        """Per-(round, org) Python assembly of the prediction stage — the
+        reference the stacked path is measured against (benchmarks, serving).
+        Needs per-org round params: call ``unpack_to_orgs()`` first on
+        fast-path results, and pad xs to ``pad_to`` columns there."""
         t_max = self.rounds if rounds is None else min(rounds, self.rounds)
         n = xs[0].shape[0]
         f = jnp.broadcast_to(self.f0, (n, self.f0.shape[-1]))
@@ -71,6 +116,20 @@ class GALResult:
             f = f + self.etas[t] * jnp.einsum("m,mnk->nk", self.weights[t], preds)
         return f
 
+    def unpack_to_orgs(self) -> None:
+        """Copy fast-path per-round params back into the Organization objects
+        so legacy per-(round, org) flows (``predict_round``) work. The params
+        were fit on slices zero-padded to ``pad_to`` columns — pad inputs with
+        ``repro.data.partition.pad_and_stack`` before applying them."""
+        if self.stacked_params is None:
+            return
+        for i, org in enumerate(self.orgs):
+            org._round_params = [
+                jax.tree_util.tree_map(
+                    lambda l, t=t, i=i: l[t, i], self.stacked_params)
+                for t in range(self.rounds)
+            ]
+
 
 def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         config: GALConfig = GALConfig(),
@@ -79,6 +138,39 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
     validation protocol), producing the per-round curves of Fig. 4."""
+    if config.engine not in ("auto", "scan", "python"):
+        raise ValueError(f"unknown engine {config.engine!r}")
+    compatible = engine_mod.scan_compatible(orgs, eval_sets)
+    if config.engine == "scan" and not compatible:
+        raise ValueError(
+            "engine='scan' needs homogeneous scan-safe organizations "
+            "(same model config, no DMS/noise, stackable slices)")
+    if (config.engine != "python" and compatible and eval_sets
+            and metric_fn is not None
+            and not engine_mod.metric_traceable(metric_fn, eval_sets)):
+        if config.engine == "scan":
+            raise ValueError(
+                "engine='scan' requires a jax-traceable metric_fn (it runs "
+                "under jit inside the scanned round step); this metric_fn "
+                "failed jax.eval_shape")
+        compatible = False  # host-side metric: fall back, don't crash the jit
+    if config.engine != "python" and compatible:
+        return _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+
+
+def _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
+    out = engine_mod.fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    return GALResult(
+        orgs=orgs, loss=loss, f0=loss.init_prediction(y),
+        etas=out["etas"], weights=out["weights"], history=out["history"],
+        stacked_params=out["params"], model=orgs[0].model,
+        org_dims=out["dims"], pad_to=out["pad_to"], engine="scan",
+    )
+
+
+def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
+    """Reference interpreter-order engine (heterogeneous fallback)."""
     n = y.shape[0]
     k = y.shape[-1]
     f0 = loss.init_prediction(y)

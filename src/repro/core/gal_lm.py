@@ -13,8 +13,20 @@ a private sequence model (any repro.configs architecture). Per round:
   4. Alice fits assistance weights on the simplex and line-searches eta.
   5. F <- F + eta * sum_m w_m f_m.
 
-This module is deliberately *small*: it composes repro.core (weights,
-line-search), repro.train.steps (losses) and repro.models (architectures).
+Like ``repro.core.gal``, two engines execute this protocol:
+
+  * a **fused scan path** when every org shares one architecture config:
+    org params/optimizer states are stacked and the local fits vmapped, the
+    T-round loop runs as one jitted ``lax.scan``, and the xent/eta/weight
+    history is materialized device-side with a single host sync per
+    ``fit_lm`` call;
+  * the **Python reference path** for heterogeneous (model-autonomy)
+    architectures — per-org dispatch, but history still syncs once at the
+    end rather than per round.
+
+This module stays deliberately *small*: it composes repro.core (weights,
+line-search), repro.train.steps (losses, local-step scan) and repro.models
+(architectures).
 """
 from __future__ import annotations
 
@@ -30,8 +42,7 @@ from repro.core.weights import fit_weights, uniform_weights
 from repro.kernels.ops import residual_xent
 from repro.models import transformer as tfm
 from repro.optim.lbfgs import line_search
-from repro.optim.optimizers import adamw, apply_updates
-from repro.train.steps import make_train_step
+from repro.train.steps import make_train_step, run_local_steps
 
 
 def compute_residual(labels: jnp.ndarray, ensemble_logits: jnp.ndarray,
@@ -55,10 +66,12 @@ class LMOrganization:
     view_fn: Callable[[jnp.ndarray], jnp.ndarray]   # tokens -> private view
     params: Any = None
     opt_state: Any = None
+    lr: Optional[float] = None
     _train_step: Any = None
 
     def init(self, rng: jax.Array, lr: float = 1e-3):
         self.params = tfm.init_params(rng, self.cfg)
+        self.lr = lr
         self._train_step, opt = make_train_step(
             self.cfg, "gal_residual", lr=lr, weight_decay=0.0)
         self.opt_state = opt.init(self.params)
@@ -68,9 +81,8 @@ class LMOrganization:
         """Fit the broadcast residual; return f_m(x_m) on the batch."""
         view = self.view_fn(tokens)
         batch = {"tokens": view, "residual": residual}
-        for _ in range(local_steps):
-            self.params, self.opt_state, _ = self._train_step(
-                self.params, self.opt_state, batch)
+        self.params, self.opt_state, _ = run_local_steps(
+            self._train_step, self.params, self.opt_state, batch, local_steps)
         logits, _ = tfm.apply(self.params, self.cfg, view)
         return logits.astype(jnp.float32)
 
@@ -86,17 +98,121 @@ class GALLMResult:
     etas: List[float] = field(default_factory=list)
     weights: List[jnp.ndarray] = field(default_factory=list)
     history: Dict[str, List[float]] = field(default_factory=dict)
+    engine: str = "python"
+
+
+def _l2(r, f):
+    return jnp.mean(jnp.square(r - f))
+
+
+def scan_compatible(orgs: List[LMOrganization]) -> bool:
+    """The fused LM path needs one shared architecture config, one shared
+    local learning rate (org 0's train step is vmapped over ALL org params,
+    so differing optimizer settings would silently be overridden), and
+    initialized params. View functions may differ — views are stacked,
+    not the fns."""
+    return bool(orgs) and all(
+        org.cfg == orgs[0].cfg and org.lr == orgs[0].lr
+        and org.params is not None and org._train_step is not None
+        for org in orgs)
 
 
 def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
            labels: jnp.ndarray, rounds: int = 4, local_steps: int = 10,
            eta_method: str = "lbfgs", use_weights: bool = True,
-           use_kernel: bool = False) -> GALLMResult:
+           use_kernel: bool = False, engine: str = "auto") -> GALLMResult:
     """Run GAL assistance rounds on an LM task (single host scale).
 
     tokens/labels: (B, S) int32. The overarching loss L1 is next-token xent;
     orgs fit logit-space residuals with ell_2 (paper Table 9 defaults).
+    ``engine``: auto | scan | python (see module docstring).
     """
+    if engine not in ("auto", "scan", "python"):
+        raise ValueError(f"unknown engine {engine!r}")
+    compatible = scan_compatible(orgs)
+    if engine == "scan" and not compatible:
+        raise ValueError("engine='scan' needs one shared, initialized "
+                         "architecture config across orgs")
+    if engine != "python" and compatible:
+        return _fit_lm_scan(rng, orgs, tokens, labels, rounds, local_steps,
+                            eta_method, use_weights, use_kernel)
+    return _fit_lm_python(rng, orgs, tokens, labels, rounds, local_steps,
+                          eta_method, use_weights, use_kernel)
+
+
+def _fit_lm_scan(rng, orgs, tokens, labels, rounds, local_steps, eta_method,
+                 use_weights, use_kernel) -> GALLMResult:
+    """Fused path: org-stacked vmapped local fits inside one scanned round
+    loop; exactly one host sync for the whole fit."""
+    m = len(orgs)
+    cfg = orgs[0].cfg
+    b, s = labels.shape
+    vocab = cfg.vocab
+    xent = CrossEntropyLoss()
+    y1 = jax.nn.one_hot(labels.reshape(-1), vocab)
+    f0 = xent.init_prediction(y1)
+
+    views = jnp.stack([org.view_fn(tokens) for org in orgs])     # (M, B, S)
+    params0 = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls), *[org.params for org in orgs])
+    opts0 = jax.tree_util.tree_map(
+        lambda *ls: jnp.stack(ls), *[org.opt_state for org in orgs])
+    vstep = jax.vmap(orgs[0]._train_step,
+                     in_axes=(0, 0, {"tokens": 0, "residual": None}))
+
+    def run(key, y1_in, labels_in, views_in, params_in, opts_in):
+        def round_step(carry, t):
+            params, opts, f = carry
+            k_round = jax.random.fold_in(key, t)
+            residual = compute_residual(
+                labels_in, f.reshape(b, s, vocab), use_kernel=use_kernel)
+            params, opts, _ = run_local_steps(
+                vstep, params, opts,
+                {"tokens": views_in, "residual": residual}, local_steps)
+            preds = jax.vmap(
+                lambda p, v: tfm.apply(p, cfg, v)[0])(params, views_in)
+            preds = preds.astype(jnp.float32).reshape(m, b * s, vocab)
+            if use_weights and m > 1:
+                w = fit_weights(jax.random.fold_in(k_round, 29),
+                                residual.reshape(b * s, vocab), preds,
+                                _l2, epochs=60)
+            else:
+                w = uniform_weights(m)
+            direction = jnp.einsum("m,mnk->nk", w, preds)
+            eta = line_search(lambda e: xent(y1_in, f + e * direction),
+                              method=eta_method, x0=1.0)
+            f = f + eta * direction
+            return (params, opts, f), {"eta": eta, "w": w,
+                                       "xent": xent(y1_in, f)}
+
+        f_init = jnp.broadcast_to(xent.init_prediction(y1_in),
+                                  (b * s, vocab))
+        carry0 = (params_in, opts_in, f_init)
+        (params, opts, _), outs = jax.lax.scan(
+            round_step, carry0, jnp.arange(rounds))
+        outs["xent0"] = xent(y1_in, f_init)
+        return params, opts, outs
+
+    params, opts, outs = jax.jit(run)(
+        rng, y1, labels, views, params0, opts0)
+    scalars = jax.device_get(outs)                # the ONE host sync
+
+    for i, org in enumerate(orgs):                # write back evolved state
+        org.params = jax.tree_util.tree_map(lambda l, i=i: l[i], params)
+        org.opt_state = jax.tree_util.tree_map(lambda l, i=i: l[i], opts)
+
+    result = GALLMResult(orgs=orgs, f0=f0, engine="scan")
+    result.etas = [float(e) for e in scalars["eta"]]
+    result.weights = [jnp.asarray(w) for w in scalars["w"]]
+    result.history["train_xent"] = [float(scalars["xent0"])] + [
+        float(v) for v in scalars["xent"]]
+    return result
+
+
+def _fit_lm_python(rng, orgs, tokens, labels, rounds, local_steps, eta_method,
+                   use_weights, use_kernel) -> GALLMResult:
+    """Reference path (heterogeneous architectures). History is accumulated
+    device-side and fetched once at the end — no per-round float() syncs."""
     b, s = labels.shape
     xent = CrossEntropyLoss()
     vocab = orgs[0].cfg.vocab
@@ -105,8 +221,7 @@ def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
     f0 = xent.init_prediction(y1)
     f = jnp.broadcast_to(f0, (b * s, vocab))
     result = GALLMResult(orgs=orgs, f0=f0)
-    hist = result.history
-    hist["train_xent"] = [float(xent(y1, f))]
+    etas_d, ws, xents = [], [], [xent(y1, f)]
 
     for t in range(rounds):
         k_round = jax.random.fold_in(rng, t)
@@ -121,15 +236,19 @@ def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
         if use_weights and len(orgs) > 1:
             w = fit_weights(jax.random.fold_in(k_round, 29),
                             residual.reshape(b * s, vocab), preds,
-                            lambda r_, f_: jnp.mean(jnp.square(r_ - f_)),
-                            epochs=60)
+                            _l2, epochs=60)
         else:
             w = uniform_weights(len(orgs))
         direction = jnp.einsum("m,mnk->nk", w, preds)
         eta = line_search(lambda e: xent(y1, f + e * direction),
                           method=eta_method, x0=1.0)
         f = f + eta * direction
-        result.etas.append(float(eta))
-        result.weights.append(w)
-        hist["train_xent"].append(float(xent(y1, f)))
+        etas_d.append(eta)
+        ws.append(w)
+        xents.append(xent(y1, f))
+
+    etas_h, xents_h = jax.device_get((etas_d, xents))
+    result.etas = [float(e) for e in etas_h]
+    result.weights = ws
+    result.history["train_xent"] = [float(v) for v in xents_h]
     return result

@@ -108,6 +108,15 @@ class Organization:
     def n_rounds_fit(self) -> int:
         return len(self._dms_heads) if self.dms else len(self._round_params)
 
+    @property
+    def scan_safe(self) -> bool:
+        """True when this org can join the fused engine's org-stack: fresh
+        per-round fits of a pure-jnp (``scan_safe``) model, no DMS state
+        (its head list grows per round), and no output noise (its
+        prediction-stage keys are Python-``hash``-derived, untraceable)."""
+        return (not self.dms and self.noise_sigma == 0.0
+                and getattr(self.model, "scan_safe", False))
+
 
 def make_orgs(xs, model_factory, local_losses=None, dms: bool = False,
               noise_sigmas=None) -> List[Organization]:

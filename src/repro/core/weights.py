@@ -17,9 +17,13 @@ from repro.optim.optimizers import adam, apply_updates
 def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
                 loss: Callable, epochs: int = 100, lr: float = 0.1,
                 weight_decay: float = 5e-4) -> jnp.ndarray:
-    """preds: (M, N, K) stacked org outputs; returns w in the M-simplex."""
+    """preds: (M, N, K) stacked org outputs; returns w in the M-simplex.
+
+    Pure lax-scan Adam: traces once inside the fused engine's round step.
+    theta is pinned to f32 so the simplex softmax stays full precision even
+    when the org outputs arrive in a lower dtype (LM-scale logits)."""
     m = preds.shape[0]
-    theta0 = jnp.zeros((m,))
+    theta0 = jnp.zeros((m,), jnp.float32)
 
     def objective(theta):
         w = jax.nn.softmax(theta)

@@ -67,3 +67,35 @@ def split_channels(x: jnp.ndarray, sizes: Sequence[int]) -> List[jnp.ndarray]:
 def flatten_for_tabular(patches: List[jnp.ndarray]) -> List[jnp.ndarray]:
     """Flatten image patches to (N, ph*pw*C) for tabular local models."""
     return [p.reshape(p.shape[0], -1) for p in patches]
+
+
+def pad_and_stack(xs: Sequence[jnp.ndarray], pad_to: int | None = None
+                  ) -> tuple:
+    """Zero-pad vertical slices to a common width and stack them org-major:
+    list of (N, d_m) -> ((M, N, d_max), [d_0..d_{M-1}]).
+
+    The fused GAL engine vmaps ONE model over the stacked slices, which
+    requires a homogeneous trailing dim. Zero columns are inert for the zoo
+    models — ridge/RBF/stump solutions and MLP outputs are unchanged by
+    constant-zero features — so per-org fits on the padded stack match fits
+    on the raw slices (exactly for the closed-form models; up to the
+    init-shape for randomly initialized ones).
+
+    Higher-rank inputs (image patches, series) must already share a shape
+    and are stacked unpadded.
+    """
+    dims = [int(x.shape[-1]) for x in xs]
+    if xs[0].ndim != 2:
+        if any(x.shape != xs[0].shape for x in xs):
+            raise ValueError("non-tabular org inputs must share a shape; got "
+                             f"{[x.shape for x in xs]}")
+        return jnp.stack(xs), dims
+    width = max(dims) if pad_to is None else pad_to
+    if any(d > width for d in dims):
+        raise ValueError(f"slice widths {dims} exceed pad width {width}")
+    padded = [
+        x if x.shape[-1] == width
+        else jnp.pad(x, ((0, 0), (0, width - x.shape[-1])))
+        for x in xs
+    ]
+    return jnp.stack(padded), dims

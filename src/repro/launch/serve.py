@@ -3,12 +3,23 @@ if os.environ.get("REPRO_FORCE_DEVICES"):
     os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
                                f" --xla_force_host_platform_device_count="
                                f"{os.environ['REPRO_FORCE_DEVICES']}")
-"""Production serving launcher: the GAL Prediction Stage at one organization
-— batched single-token decode against a KV/state cache on a mesh.
+"""Production serving launcher: the GAL Prediction Stage.
 
-Example (CPU container):
+Two serving modes:
+
+  * LM decode (default): batched single-token decode at one organization
+    against a KV/state cache on a mesh.
+  * ``--gal-ensemble``: the full multi-org Prediction Stage — fit a
+    homogeneous GAL ensemble on a synthetic vertical split, then serve
+    batched predictions through the stacked-round fast path (ONE vmap over
+    rounds x orgs per request) and report latency vs the legacy
+    per-(round, org) Python assembly.
+
+Examples (CPU container):
   REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --arch rwkv6-7b --smoke --mesh 2,4 --batch 8 --steps 16
+  PYTHONPATH=src python -m repro.launch.serve --gal-ensemble \
+      --rounds 8 --orgs 4 --batch 256 --steps 32
 """
 import argparse
 import time
@@ -17,15 +28,76 @@ import jax
 import jax.numpy as jnp
 
 
+def gal_ensemble_serve(args) -> None:
+    """Serve the stacked-round GAL ensemble; print ms/request for the fused
+    vmap path next to the legacy per-(round, org) loop."""
+    import numpy as np
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import Linear
+
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    ds = make_regression(rng_np, n=512, d=4 * args.orgs)
+    train, test = train_test_split(ds, rng_np)
+    xs = split_features(train.x, args.orgs)
+    res = gal.fit(key, make_orgs(xs, Linear()), train.y, get_loss("mse"),
+                  GALConfig(rounds=args.rounds, engine="scan"))
+
+    xs_req = [jnp.tile(x, (max(1, args.batch // x.shape[0]) + 1, 1)
+                       )[:args.batch] for x in split_features(test.x,
+                                                              args.orgs)]
+    serve_fast = jax.jit(lambda xq: res.predict(xq))
+    jax.block_until_ready(serve_fast(xs_req))            # compile
+    t0 = time.time()
+    for _ in range(args.steps):
+        out = serve_fast(xs_req)
+    jax.block_until_ready(out)
+    dt_fast = (time.time() - t0) / args.steps
+
+    res.unpack_to_orgs()                                  # legacy loop path
+    from repro.data.partition import pad_and_stack
+    xe_stack, _ = pad_and_stack(xs_req, pad_to=res.pad_to)
+    xs_padded = list(xe_stack)
+
+    jax.block_until_ready(res.predict_legacy(xs_padded))
+    t0 = time.time()
+    for _ in range(args.steps):
+        out_legacy = res.predict_legacy(xs_padded)
+    jax.block_until_ready(out_legacy)
+    dt_legacy = (time.time() - t0) / args.steps
+
+    drift = float(jnp.max(jnp.abs(out - out_legacy)))
+    print(f"gal-ensemble orgs={args.orgs} rounds={args.rounds} "
+          f"batch={args.batch}: stacked={dt_fast * 1e3:.2f} ms/req "
+          f"legacy={dt_legacy * 1e3:.2f} ms/req "
+          f"speedup={dt_legacy / max(dt_fast, 1e-9):.1f}x "
+          f"max_drift={drift:.2e}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch", default=None)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--mesh", default="1,1")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--steps", type=int, default=16)
     ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--gal-ensemble", action="store_true",
+                    help="serve the stacked-round GAL Prediction Stage")
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--orgs", type=int, default=4)
     args = ap.parse_args()
+
+    if args.gal_ensemble:
+        gal_ensemble_serve(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required unless --gal-ensemble is given")
 
     from repro.configs import get_arch
     from repro.configs.base import InputShape

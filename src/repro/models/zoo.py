@@ -17,6 +17,12 @@ Interface (duck-typed, see Organization):
   apply(params, x)            -> (N, K)
 Optionally for Interm fusion / DMS:
   features(params, x) -> (N, H), feature_dim(x_example), init_head, apply_head
+
+``scan_safe = True`` declares that ``fit``/``apply`` are pure functions of
+their jnp inputs (no Python-level data-dependent control flow or host
+callbacks), so the fused GAL engine may jit them and vmap one model instance
+over org-stacked slices. External duck-typed models default to NOT scan-safe
+and route through the Python reference engine.
 """
 from __future__ import annotations
 
@@ -63,9 +69,15 @@ def _dense(params, x):
 @ZOO.register("linear")
 @dataclass(frozen=True)
 class Linear:
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
     ridge: float = 1e-3
     epochs: int = 100          # used only for non-ell_2 local losses
     lr: float = 1e-2
+
+    def pad_invariant(self, q: float) -> bool:
+        # closed-form ridge decouples zero columns exactly; the q!=2 Adam
+        # path inits params at the padded width, changing the random draws
+        return q == 2.0
 
     def init(self, rng, x_example, k_out):
         return _dense_init(rng, x_example.shape[-1], k_out)
@@ -91,6 +103,7 @@ class Linear:
 @ZOO.register("mlp")
 @dataclass(frozen=True)
 class MLP:
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
     hidden: Sequence[int] = (64, 64)
     epochs: int = 200
     lr: float = 1e-2
@@ -138,6 +151,8 @@ class StumpBoost:
     candidate thresholds; each stump fits the current residual-of-residual
     with per-leaf means, shrunk by ``shrinkage``.
     """
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    pad_invariant = True  # zero columns have zero split gain
     n_stumps: int = 50
     n_thresholds: int = 16
     shrinkage: float = 0.3
@@ -210,6 +225,8 @@ class StumpBoost:
 @dataclass(frozen=True)
 class KernelRidge:
     """RBF kernel ridge regression (the paper's "SVM" autonomy stand-in)."""
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    pad_invariant = True  # zero columns add nothing to RBF distances
     gamma: float = 0.5
     reg: float = 1e-2
 
@@ -250,6 +267,7 @@ def _conv_init(rng, cin, cout, ksize=3):
 @dataclass(frozen=True)
 class ConvNet:
     """Paper Table-8 CNN (conv+pool x4, GAP, linear), width-scaled for CPU."""
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
     widths: Sequence[int] = (16, 32, 64, 64)
     epochs: int = 60
     lr: float = 1e-3
@@ -299,6 +317,7 @@ class ConvNet:
 @dataclass(frozen=True)
 class GRUNet:
     """GRU over (N, T, D) series + linear head (MIMIC-like case study)."""
+    scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
     hidden_size: int = 32
     epochs: int = 120
     lr: float = 3e-3

@@ -65,10 +65,13 @@ def scalar_lbfgs(fn, x0: float = 1.0, iters: int = 25, max_range: float = 64.0):
         h = jnp.clip(h, 1e-4, max_range)
         step = -h * gx
         x_new = jnp.clip(x + step, -max_range, max_range)
-        # Armijo halving (fixed 6 trials, branchless)
+        # Armijo halving (fixed 6 trials, branchless); fn(x) is hoisted —
+        # each fn eval is a full ensemble-loss pass in the GAL engine
+        f_x = fn(x)
+
         def armijo(_, xs):
             x_try, = xs
-            worse = fn(x_try) > fn(x) + 1e-4 * gx * (x_try - x)
+            worse = fn(x_try) > f_x + 1e-4 * gx * (x_try - x)
             return (jnp.where(worse, 0.5 * (x_try + x), x_try),)
 
         (x_new,) = jax.lax.fori_loop(0, 6, armijo, (x_new,))
@@ -81,7 +84,9 @@ def scalar_lbfgs(fn, x0: float = 1.0, iters: int = 25, max_range: float = 64.0):
 
 
 def line_search(fn, method: str = "lbfgs", x0: float = 1.0, iters: int = 25):
-    """Unified entry used by the GAL engine. method in {lbfgs, golden, constant}."""
+    """Unified entry used by the GAL engines. method in {lbfgs, golden,
+    constant}. Built from lax loops only, so it traces cleanly inside the
+    fused engine's jitted round step (no retracing per round)."""
     if method == "constant":
         return jnp.asarray(x0, jnp.float32)
     if method == "golden":

@@ -163,6 +163,23 @@ def make_train_step(cfg: ModelConfig, loss_kind: str = "gal_residual",
     return train_step, opt
 
 
+def run_local_steps(train_step, params, opt_state, batch, steps: int):
+    """Run ``steps`` optimizer steps over one fixed batch as a single
+    lax.scan: a GAL organization's per-round local fit compiles to one device
+    program instead of ``steps`` Python dispatches. ``train_step`` may be a
+    raw step or a vmapped (org-stacked) one — the fused LM engine passes the
+    latter. Returns (params, opt_state, stacked per-step metrics)."""
+
+    def body(carry, _):
+        p, s = carry
+        p, s, metrics = train_step(p, s, batch)
+        return (p, s), metrics
+
+    (params, opt_state), metrics = jax.lax.scan(
+        body, (params, opt_state), None, length=steps)
+    return params, opt_state, metrics
+
+
 def make_prefill_step(cfg: ModelConfig, flash: bool = False):
     """Inference prefill: full-sequence forward producing logits (scoring).
     Cache materialization is left to the serving layer (noted in DESIGN.md)."""

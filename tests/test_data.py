@@ -2,6 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.data.partition import (

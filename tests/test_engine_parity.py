@@ -1,0 +1,237 @@
+"""Scan fast path == Python reference path (the fused-engine contract).
+
+The fused engine replays Algorithm 1 with identical RNG discipline, so for
+deterministic local fits (closed-form ridge) every recorded quantity — etas,
+assistance weights, train/eval loss history — must agree with the reference
+engine to float tolerance, including on unequal vertical splits where the
+fast path zero-pads the org slices.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import gal
+from repro.core.engine import scan_compatible
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import pad_and_stack, split_features
+from repro.data.synthetic import make_blobs, make_regression, train_test_split
+from repro.metrics.metrics import accuracy, mad
+from repro.models.zoo import KernelRidge, Linear, StumpBoost
+
+
+def _setting(rng_np, m=4, d=12, n=400):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def _both_engines(key, xs, y, loss, cfg, **kw):
+    import dataclasses
+    res_py = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                     dataclasses.replace(cfg, engine="python"), **kw)
+    res_sc = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                     dataclasses.replace(cfg, engine="scan"), **kw)
+    return res_py, res_sc
+
+
+def test_auto_selects_scan_for_homogeneous_orgs(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=2))
+    assert res.engine == "scan"
+    assert res.stacked_params is not None
+    # stacked pytree: leaves carry (T, M, ...) leading dims
+    leaves = jax.tree_util.tree_leaves(res.stacked_params)
+    assert all(l.shape[:2] == (2, 4) for l in leaves)
+
+
+def test_parity_etas_weights_history(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    res_py, res_sc = _both_engines(
+        key, xs, y, get_loss("mse"), GALConfig(rounds=5),
+        eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    np.testing.assert_allclose(res_sc.etas, res_py.etas, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.stack(res_sc.weights),
+                               np.stack(res_py.weights), atol=1e-4)
+    for colname in ("train_loss", "test_loss", "test_metric"):
+        np.testing.assert_allclose(res_sc.history[colname],
+                                   res_py.history[colname],
+                                   rtol=1e-3, atol=1e-4, err_msg=colname)
+
+
+def test_parity_on_unequal_split_needs_padding(rng_np, key):
+    """d=13 over 4 orgs -> slice widths (4,3,3,3); the zero-pad must be inert."""
+    xs, y, _, _ = _setting(rng_np, d=13)
+    assert len({x.shape[-1] for x in xs}) > 1
+    res_py, res_sc = _both_engines(key, xs, y, get_loss("mse"),
+                                   GALConfig(rounds=4))
+    np.testing.assert_allclose(res_sc.etas, res_py.etas, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res_sc.history["train_loss"],
+                               res_py.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_parity_classification_xent(rng_np, key):
+    ds = make_blobs(rng_np, n=150, d=10, k=5)
+    tr, te = train_test_split(ds, rng_np)
+    xs, xs_te = split_features(tr.x, 4), split_features(te.x, 4)
+    res_py, res_sc = _both_engines(
+        key, xs, tr.y, get_loss("xent"), GALConfig(rounds=4),
+        eval_sets={"test": (xs_te, te.y)}, metric_fn=accuracy)
+    np.testing.assert_allclose(res_sc.etas, res_py.etas, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(res_sc.history["test_metric"],
+                               res_py.history["test_metric"], atol=0.5)
+
+
+def test_stacked_predict_equivalence(rng_np, key):
+    """One-vmap stacked prediction == per-(round, org) Python assembly, on
+    the SAME fitted params (unpacked back into the Organization objects)."""
+    xs, y, xs_te, y_te = _setting(rng_np, d=13)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=4, engine="scan"))
+    pred_fast = np.asarray(res.predict(xs_te))
+
+    res.unpack_to_orgs()
+    xe_stack, _ = pad_and_stack(xs_te, pad_to=res.pad_to)
+    n = xs_te[0].shape[0]
+    f = jnp.broadcast_to(res.f0, (n, res.f0.shape[-1]))
+    for t in range(res.rounds):
+        preds = jnp.stack([org.predict_round(t, xe_stack[m])
+                           for m, org in enumerate(res.orgs)])
+        f = f + res.etas[t] * jnp.einsum("m,mnk->nk", res.weights[t], preds)
+    np.testing.assert_allclose(pred_fast, np.asarray(f), rtol=1e-4, atol=1e-5)
+
+    # and against the reference engine's own predict
+    res_py = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=4, engine="python"))
+    np.testing.assert_allclose(pred_fast, np.asarray(res_py.predict(xs_te)),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_predict_rounds_truncation(rng_np, key):
+    xs, y, xs_te, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=3, engine="scan"))
+    p0 = np.asarray(res.predict(xs_te, rounds=0))
+    np.testing.assert_allclose(p0, np.broadcast_to(np.asarray(res.f0),
+                                                   p0.shape))
+    assert not np.allclose(p0, np.asarray(res.predict(xs_te, rounds=2)))
+
+
+def test_scan_respects_eta_stop_threshold(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=10, eta_stop_threshold=10.0, engine="scan"))
+    assert res.rounds == 1
+    assert len(res.history["train_loss"]) == 2
+    leaves = jax.tree_util.tree_leaves(res.stacked_params)
+    assert all(l.shape[0] == 1 for l in leaves)
+
+
+def test_pad_invariant_models_parity_on_unequal_split(rng_np, key):
+    """KernelRidge/StumpBoost fits are exactly pad-invariant: scan == python
+    even when the org slices are zero-padded."""
+    xs, y, _, _ = _setting(rng_np, d=13, n=150)
+    for model in (KernelRidge(), StumpBoost(n_stumps=8)):
+        res_py = gal.fit(key, make_orgs(xs, model), y, get_loss("mse"),
+                         GALConfig(rounds=2, engine="python"))
+        res_sc = gal.fit(key, make_orgs(xs, model), y, get_loss("mse"),
+                         GALConfig(rounds=2, engine="scan"))
+        np.testing.assert_allclose(
+            res_sc.history["train_loss"], res_py.history["train_loss"],
+            rtol=1e-3, atol=1e-4, err_msg=type(model).__name__)
+
+
+def test_random_init_models_fall_back_when_padding_needed(rng_np, key):
+    """MLP inits params at the padded width, so auto keeps it on the python
+    path for unequal splits (and on the scan path for equal ones)."""
+    from repro.models.zoo import MLP
+    xs_unequal, y, _, _ = _setting(rng_np, d=13, n=100)
+    res = gal.fit(key, make_orgs(xs_unequal, MLP((8,), epochs=10)), y,
+                  get_loss("mse"), GALConfig(rounds=1))
+    assert res.engine == "python"
+    xs_equal, y2, _, _ = _setting(rng_np, d=12, n=100)
+    res2 = gal.fit(key, make_orgs(xs_equal, MLP((8,), epochs=10)), y2,
+                   get_loss("mse"), GALConfig(rounds=1))
+    assert res2.engine == "scan"
+
+
+def test_stacked_predict_rejects_mismatched_slices(rng_np, key):
+    xs, y, xs_te, _ = _setting(rng_np, d=13)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=2, engine="scan"))
+    with pytest.raises(ValueError, match="widths"):
+        res.predict(list(reversed(xs_te)))  # wrong org order
+
+
+def test_heterogeneous_orgs_fall_back_to_python(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    models = [Linear(), StumpBoost(n_stumps=10), KernelRidge(), Linear()]
+    orgs = make_orgs(xs, models)
+    assert not scan_compatible(orgs)
+    res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=2))
+    assert res.engine == "python" and res.stacked_params is None
+    with pytest.raises(ValueError):
+        gal.fit(key, make_orgs(xs, models), y, get_loss("mse"),
+                GALConfig(rounds=2, engine="scan"))
+
+
+def test_dms_and_noise_fall_back(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    assert not scan_compatible(make_orgs(xs, Linear(), dms=True))
+    assert not scan_compatible(
+        make_orgs(xs, Linear(), noise_sigmas=[0.1] * 4))
+
+
+def test_scan_engine_with_privacy_runs(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=3, privacy="dp", privacy_alpha=5.0,
+                            engine="scan"))
+    assert res.engine == "scan"
+    assert np.isfinite(res.history["train_loss"]).all()
+
+
+def test_scan_engine_nonuniform_weights_off(rng_np, key):
+    res_py, res_sc = _both_engines(
+        jax.random.PRNGKey(3), *_setting(np.random.default_rng(3))[:2],
+        get_loss("mse"), GALConfig(rounds=3, use_weights=False))
+    for w in res_sc.weights:
+        np.testing.assert_allclose(np.asarray(w), 0.25, atol=1e-6)
+    np.testing.assert_allclose(res_sc.history["train_loss"],
+                               res_py.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_lm_engine_parity(key):
+    """Fused LM round engine == reference loop (shared smoke architecture)."""
+    import math
+    from repro.configs import get_arch
+    from repro.core import gal_lm
+    from repro.data.tokens import make_token_stream, token_batches
+
+    cfg = get_arch("llama3-8b", smoke=True)
+    rng_np = np.random.default_rng(0)
+    stream = make_token_stream(rng_np, cfg.vocab, 2000)
+    toks, labels = next(token_batches(stream, batch=2, seq_len=16, rng=rng_np))
+    toks, labels = jnp.asarray(toks), jnp.asarray(labels)
+    root = int(math.isqrt(cfg.vocab))
+
+    def mk():
+        orgs = [gal_lm.LMOrganization(0, cfg, lambda t: (t // root) % cfg.vocab),
+                gal_lm.LMOrganization(1, cfg, lambda t: (t % root) % cfg.vocab)]
+        for i, org in enumerate(orgs):
+            org.init(jax.random.fold_in(jax.random.PRNGKey(0), i), lr=3e-3)
+        return orgs
+
+    res_py = gal_lm.fit_lm(key, mk(), toks, labels, rounds=2, local_steps=3,
+                           engine="python")
+    res_sc = gal_lm.fit_lm(key, mk(), toks, labels, rounds=2, local_steps=3,
+                           engine="scan")
+    assert res_py.engine == "python" and res_sc.engine == "scan"
+    np.testing.assert_allclose(res_sc.history["train_xent"],
+                               res_py.history["train_xent"], rtol=1e-4)
+    np.testing.assert_allclose(res_sc.etas, res_py.etas, rtol=1e-3, atol=1e-4)
