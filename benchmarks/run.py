@@ -90,6 +90,79 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
     print(f"gal_predict_legacy_R{rounds}_M{m},{t_leg:.1f},per-round-org-loop")
 
 
+_SHARD_BENCH_SNIPPET = r"""
+import time
+from repro.utils.force_devices import apply_force_devices
+apply_force_devices()
+import numpy as np
+import jax
+from repro.core import gal
+from repro.core.engine import shard_eligible
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.models.zoo import Linear
+
+rounds, m, n, d = {rounds}, {m}, {n}, {d}
+rng_np = np.random.default_rng(0)
+key = jax.random.PRNGKey(0)
+ds = make_regression(rng_np, n=n, d=d)
+train, _ = train_test_split(ds, rng_np)
+xs = split_features(train.x, m)
+orgs = make_orgs(xs, Linear())
+engine = "shard" if shard_eligible(orgs) else "scan"
+t0 = time.perf_counter()
+res = gal.fit(key, orgs, train.y, get_loss("mse"),
+              GALConfig(rounds=rounds, engine=engine))
+dt = time.perf_counter() - t0
+bcast = sum(res.history.get("comm_broadcast_bytes", [0]))
+gathered = sum(res.history.get("comm_gather_bytes", [0]))
+print(f"gal_fit_shard_D{{len(jax.devices())}}_R{{rounds}}_M{{m}},"
+      f"{{dt / rounds * 1e6:.1f}},rounds_per_sec={{rounds / dt:.2f}}"
+      f";engine={{res.engine}};bcast_B={{bcast:.0f}};gather_B={{gathered:.0f}}")
+"""
+
+
+def gal_shard_scaling_benchmark(rounds: int = 8, n: int = 512,
+                                device_counts=(1, 4, 8)) -> None:
+    """rounds/sec of the org-sharded engine at 1/4/8 forced host devices.
+
+    Each row runs in a subprocess: --xla_force_host_platform_device_count
+    must be set before jax initializes, so the device count cannot vary
+    within one process. Organizations scale WITH the devices (one org per
+    device, 4 features each) — that is the axis the shard engine
+    parallelizes, so the D8 row genuinely uses 8 devices rather than
+    re-timing a 4-device mesh. The 1-device row runs 4 orgs on the scan
+    engine (no org mesh) as the single-device baseline; timings include
+    compilation, like gal_engine_benchmark."""
+    import os
+    import subprocess
+    import sys
+
+    for n_dev in device_counts:
+        m = n_dev if n_dev > 1 else 4
+        snippet = _SHARD_BENCH_SNIPPET.format(rounds=rounds, m=m, n=n,
+                                              d=4 * m)
+        env = {**os.environ, "REPRO_FORCE_DEVICES": str(n_dev)}
+        env["PYTHONPATH"] = "src" + (
+            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+        try:
+            proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                                  capture_output=True, text=True, timeout=600)
+        except subprocess.TimeoutExpired:
+            print(f"gal_fit_shard_D{n_dev}_R{rounds}_M{m},nan,"
+                  f"failed=timeout>600s")
+            continue
+        if proc.returncode == 0:
+            print(proc.stdout.strip())
+        else:
+            tail = proc.stderr.strip().splitlines()[-1:]
+            print(f"gal_fit_shard_D{n_dev}_R{rounds}_M{m},nan,"
+                  f"failed={' '.join(tail)}")
+
+
 def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
     """Summarize the dry-run artifacts into the SS Roofline table."""
     rows = []
@@ -136,6 +209,10 @@ def main() -> None:
     print("\n# gal engine: fused scan vs legacy python (name,us_per_round,"
           "derived)")
     gal_engine_benchmark()
+
+    print("\n# gal shard engine scaling: rounds/sec at forced host devices "
+          "(name,us_per_round,derived)")
+    gal_shard_scaling_benchmark()
 
     print("\n# roofline table (from dry-run artifacts)")
     roofline_summary()

@@ -43,6 +43,8 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         eval_sets: Optional[Dict[str, tuple]] = None,
         metric_fn=None) -> ALResult:
     """``total_steps`` sequential org fits, round-robin order."""
+    for org in orgs:
+        org.reset_round_state()  # a refit must not read stale round params
     n, k = y.shape[0], y.shape[-1]
     f0 = loss.init_prediction(y)
     f_train = jnp.broadcast_to(f0, (n, k))

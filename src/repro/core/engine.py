@@ -1,4 +1,4 @@
-"""Fused, scan-compiled GAL round engine (paper Algorithm 1, fast path).
+"""Fused, scan-compiled GAL round engines (paper Algorithm 1, fast paths).
 
 The reference engine in ``repro.core.gal`` executes Algorithm 1 as a Python
 loop: every round pays M Python dispatches for the local fits, a re-traced
@@ -20,10 +20,28 @@ The ONLY host synchronization is a single ``jax.device_get`` of the scalar
 bundle after the scan returns — matching GAL's communication structure
 (orgs are parallel within a round; rounds are sequential).
 
+Two fused executions share that round step structure:
+
+  * ``fit_scan`` — the single-device fast path: the org axis is a
+    ``jax.vmap`` over the stacked slices;
+  * ``fit_shard`` — the org-SHARDED multi-device path
+    (``GALConfig.engine="shard"``): the org axis maps onto a real device
+    mesh (``repro.launch.mesh.make_org_mesh``, one organization per device
+    along an "org" axis). Each org's padded slice, per-round params and
+    local fits live on its own device; Alg. 1's communication structure
+    becomes real collectives — the residual broadcast is a masked ``psum``
+    from Alice's device (step 2), the fitted values are ``all_gather``-ed
+    back for the weight fit (step 4), and the weighted direction is a
+    ``psum`` over the org axis (step 6). The bytes crossing that collective
+    boundary are recorded in a per-round communication ledger
+    (``history["comm_broadcast_bytes"]`` / ``history["comm_gather_bytes"]``,
+    mirroring the paper's Table-14 accounting in
+    ``repro.core.protocol_sim``).
+
 RNG discipline replicates the reference engine exactly (split per round;
 ``fold_in(k_round, 13)`` privacy, ``fold_in(k_round, org.index)`` per-org fit,
 ``fold_in(k_round, 29)`` weight fit), so for deterministic local models
-(ridge / kernel ridge / stumps) the two engines agree to float tolerance.
+(ridge / kernel ridge / stumps) all three engines agree to float tolerance.
 
 Early stopping (``eta_stop_threshold``) cannot break a ``lax.scan``; instead
 rounds after the threshold crossing are masked (eta forced to 0, ensemble
@@ -35,12 +53,18 @@ from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.losses import Loss, lq_loss
 from repro.core.privacy import apply_privacy
 from repro.core.weights import fit_weights, uniform_weights
-from repro.data.partition import pad_and_stack
+from repro.data.partition import pad_and_stack, pad_and_stack_sharded
+from repro.launch.mesh import make_org_mesh, org_mesh_eligible
+from repro.launch.sharding import org_replicated, org_stack_sharding
 from repro.optim.lbfgs import line_search
+
+_WIRE_ITEMSIZE = 4  # residuals / fitted values travel as f32 on the wire
 
 
 def scan_compatible(orgs: Sequence[Any],
@@ -120,6 +144,126 @@ def metric_traceable(metric_fn: Callable,
         return False
 
 
+def shard_eligible(orgs: Sequence[Any],
+                   eval_sets: Optional[Dict[str, tuple]] = None) -> bool:
+    """True when the org-sharded multi-device path can run these orgs:
+    scan-compatible AND an "org" mesh exists (len(orgs) divides the local
+    device count, multi-device host). ``engine="auto"`` prefers this path
+    whenever it holds."""
+    return (scan_compatible(orgs, eval_sets)
+            and org_mesh_eligible(len(orgs)))
+
+
+def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
+              rounds: int, dims: Sequence[int], pad_to: Optional[int],
+              comm: Optional[Dict[str, int]] = None) -> Dict[str, Any]:
+    """Shared host-side tail of the fused engines: ONE ``jax.device_get``
+    of the scalar bundle, early-stop trimming, history assembly.
+
+    History columns: train/eval losses and metrics get the round-0 ``init``
+    entry prepended (length T+1); ``comm`` maps ledger columns to exact
+    per-round byte counts (static shapes -> identical every round), added
+    as length-T rows of Python ints so the accounting never loses precision
+    to f32 at scale."""
+    params_stacked = outs.pop("params")           # stays on device
+    scalars, init = jax.device_get((outs, init))  # the ONE host sync
+    n_valid = int(scalars["valid"].sum()) if masked else rounds
+    history: Dict[str, List[float]] = {}
+    for col, vals in scalars.items():
+        if col in ("eta", "w", "valid"):
+            continue
+        history[col] = [float(init[col])] + [float(v) for v in vals[:n_valid]]
+    for col, per_round in (comm or {}).items():
+        history[col] = [per_round] * n_valid
+    return {
+        "params": jax.tree_util.tree_map(lambda l: l[:n_valid], params_stacked),
+        "etas": [float(e) for e in scalars["eta"][:n_valid]],
+        "weights": [jnp.asarray(w) for w in scalars["w"][:n_valid]],
+        "history": history,
+        "dims": dims,
+        "pad_to": pad_to,
+    }
+
+
+def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
+                m, n, k, masked, metric_fn, alice_loss):
+    """The shared T-round loop of both fused engines: Alg. 1 steps 1-6
+    traced once and scanned ``config.rounds`` times.
+
+    The org axis enters ONLY through two primitives supplied by the caller:
+
+      * ``broadcast(r)`` — step 2's residual distribution (identity on the
+        vmap engine; a masked psum from Alice's device on the mesh engine);
+      * ``fit_orgs(k_round, r_bcast) -> (params_out, preds, combine)`` —
+        step 3's parallel fits. ``params_out`` is the per-round params
+        output (M-stacked / org-sharded), ``preds`` the (M, N, K) fitted
+        values handed to the step-4 weight fit, and ``combine(w, name)``
+        the weighted org-sum of fitted values on the train set
+        (``name=None``) or eval set ``name`` (einsum vs psum).
+
+    Everything else — residual, privacy, weight fit, eta line search,
+    masked early stopping, history bookkeeping — is engine-independent and
+    lives here exactly once.
+    """
+    def round_step(carry, _):
+        f, f_evals, key, active = carry
+        key, k_round = jax.random.split(key)
+        # 1. pseudo-residual  2. privatized broadcast
+        residual = loss.residual(y_in, f)
+        r_bcast = broadcast(apply_privacy(
+            jax.random.fold_in(k_round, 13), residual, config.privacy,
+            alpha=config.privacy_alpha,
+            n_intervals=config.privacy_intervals,
+        ))
+        # 3. parallel local fits over the org axis
+        params_out, preds, combine = fit_orgs(k_round, r_bcast)
+        # 4. gradient assistance weights
+        if config.use_weights and m > 1:
+            w = fit_weights(
+                jax.random.fold_in(k_round, 29), residual, preds,
+                alice_loss, epochs=config.weight_epochs,
+                lr=config.weight_lr, weight_decay=config.weight_decay,
+            )
+        else:
+            w = uniform_weights(m)
+        direction = combine(w, None)
+
+        # 5. line-search eta   6. masked ensemble update
+        eta = line_search(
+            lambda e: loss(y_in, f + e * direction),
+            method=config.eta_method, x0=config.eta0,
+        )
+        eta_eff = jnp.where(active, eta, 0.0) if masked else eta
+        f_new = f + eta_eff * direction
+
+        outs = {"params": params_out, "eta": eta_eff, "w": w,
+                "valid": active, "train_loss": loss(y_in, f_new)}
+        new_evals = {}
+        for name, (_, y_e) in evals_in.items():
+            fe = f_evals[name] + eta_eff * combine(w, name)
+            new_evals[name] = fe
+            outs[f"{name}_loss"] = loss(y_e, fe)
+            if metric_fn is not None:
+                outs[f"{name}_metric"] = metric_fn(y_e, fe)
+        new_active = (active & (jnp.abs(eta) >= config.eta_stop_threshold)
+                      if masked else active)
+        return (f_new, new_evals, key, new_active), outs
+
+    f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
+    f_evals = {
+        name: jnp.broadcast_to(loss.init_prediction(y_in), (y_e.shape[0], k))
+        for name, (_, y_e) in evals_in.items()
+    }
+    init = {"train_loss": loss(y_in, f)}
+    for name, (_, y_e) in evals_in.items():
+        init[f"{name}_loss"] = loss(y_e, f_evals[name])
+        if metric_fn is not None:
+            init[f"{name}_metric"] = metric_fn(y_e, f_evals[name])
+    carry0 = (f, f_evals, key, jnp.asarray(True))
+    _, outs = jax.lax.scan(round_step, carry0, None, length=config.rounds)
+    return outs, init
+
+
 def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
              config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
              metric_fn: Optional[Callable] = None) -> Dict[str, Any]:
@@ -147,18 +291,8 @@ def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
             eval_stacks[name] = (xe_stack, y_e)
 
     def run(key, y_in, x_in, evals_in):
-        def round_step(carry, _):
-            f, f_evals, key, active = carry
-            key, k_round = jax.random.split(key)
-            # 1. pseudo-residual  2. privatized broadcast
-            residual = loss.residual(y_in, f)
-            r_bcast = apply_privacy(
-                jax.random.fold_in(k_round, 13), residual, config.privacy,
-                alpha=config.privacy_alpha,
-                n_intervals=config.privacy_intervals,
-            )
-
-            # 3. parallel local fits: one model vmapped over the org stack
+        def fit_orgs(k_round, r_bcast):
+            # one model vmapped over the org stack
             def fit_one(key_m, x_m):
                 params = model.fit(key_m, x_m, r_bcast, local_loss)
                 return params, model.apply(params, x_m)
@@ -167,75 +301,131 @@ def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                 lambda i: jax.random.fold_in(k_round, i))(org_ids)
             params_t, preds = jax.vmap(fit_one)(org_keys, x_in)  # (M, N, K)
 
-            # 4. gradient assistance weights
-            if config.use_weights and m > 1:
-                w = fit_weights(
-                    jax.random.fold_in(k_round, 29), residual, preds,
-                    alice_loss, epochs=config.weight_epochs,
-                    lr=config.weight_lr, weight_decay=config.weight_decay,
-                )
-            else:
-                w = uniform_weights(m)
-            direction = jnp.einsum("m,mnk->nk", w, preds)
+            def combine(w, name):
+                if name is None:
+                    return jnp.einsum("m,mnk->nk", w, preds)
+                preds_e = jax.vmap(model.apply)(params_t, evals_in[name][0])
+                return jnp.einsum("m,mnk->nk", w, preds_e)
 
-            # 5. line-search eta   6. masked ensemble update
-            eta = line_search(
-                lambda e: loss(y_in, f + e * direction),
-                method=config.eta_method, x0=config.eta0,
-            )
-            eta_eff = jnp.where(active, eta, 0.0) if masked else eta
-            f_new = f + eta_eff * direction
+            return params_t, preds, combine
 
-            outs = {"params": params_t, "eta": eta_eff, "w": w,
-                    "valid": active, "train_loss": loss(y_in, f_new)}
-            new_evals = {}
-            for name, (xe_stack, y_e) in evals_in.items():
-                preds_e = jax.vmap(model.apply)(params_t, xe_stack)
-                fe = (f_evals[name]
-                      + eta_eff * jnp.einsum("m,mnk->nk", w, preds_e))
-                new_evals[name] = fe
-                outs[f"{name}_loss"] = loss(y_e, fe)
-                if metric_fn is not None:
-                    outs[f"{name}_metric"] = metric_fn(y_e, fe)
-            new_active = (active & (jnp.abs(eta) >= config.eta_stop_threshold)
-                          if masked else active)
-            return (f_new, new_evals, key, new_active), outs
-
-        f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
-        f_evals = {
-            name: jnp.broadcast_to(loss.init_prediction(y_in), (y_e.shape[0], k))
-            for name, (_, y_e) in evals_in.items()
-        }
-        init = {"train_loss": loss(y_in, f)}
-        for name, (_, y_e) in evals_in.items():
-            init[f"{name}_loss"] = loss(y_e, f_evals[name])
-            if metric_fn is not None:
-                init[f"{name}_metric"] = metric_fn(y_e, f_evals[name])
-        carry0 = (f, f_evals, key, jnp.asarray(True))
-        _, outs = jax.lax.scan(round_step, carry0, None, length=config.rounds)
-        return outs, init
+        return _run_rounds(key, y_in, evals_in, lambda r: r, fit_orgs,
+                           loss=loss, config=config, m=m, n=n, k=k,
+                           masked=masked, metric_fn=metric_fn,
+                           alice_loss=alice_loss)
 
     outs, init = jax.jit(run)(rng, y, x_stack, eval_stacks)
-    params_stacked = outs.pop("params")           # stays on device
-    scalars, init = jax.device_get((outs, init))  # the ONE host sync
+    return _finalize(outs, init, masked, config.rounds, dims, pad_to)
 
-    n_valid = int(scalars["valid"].sum()) if masked else config.rounds
-    history = {"train_loss": [float(init["train_loss"])]
-               + [float(v) for v in scalars["train_loss"][:n_valid]]}
+
+def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
+              config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
+              metric_fn: Optional[Callable] = None) -> Dict[str, Any]:
+    """Run Algorithm 1 org-sharded across devices (see the module docstring).
+
+    Same contract as ``fit_scan`` — the T-round ``lax.scan``, the single
+    host sync, and the returned dict are identical — but the org axis is a
+    real device mesh instead of a ``vmap``: org m's padded slice, per-round
+    params, and fitted values never leave device m except through Alg. 1's
+    three collectives (residual broadcast, fitted-value gather, weighted
+    direction psum). The returned history carries the per-round
+    communication ledger (``comm_broadcast_bytes`` / ``comm_gather_bytes``,
+    paper Table-14 convention: Alice already holds her own residual copy,
+    every org — Alice included — ships its fitted values)."""
+    m = len(orgs)
+    if not org_mesh_eligible(m):
+        raise ValueError(
+            f"engine='shard' needs an org mesh: {m} orgs must divide the "
+            f"device count ({jax.device_count()} devices, multi-device "
+            f"host required)")
+    mesh = make_org_mesh(m)
+    model = orgs[0].model
+    local_loss = orgs[0].local_loss
+    n, k = y.shape[0], y.shape[-1]
+    alice_loss = lq_loss(config.alice_q)
+    masked = config.eta_stop_threshold > 0.0
+
+    # org-major placement: slice m / id m on device m, Alice state replicated
+    x_stack, dims = pad_and_stack_sharded([org.x_train for org in orgs], mesh)
+    pad_to = int(x_stack.shape[-1]) if x_stack.ndim == 3 else None
+    org_ids = jax.device_put(
+        jnp.asarray([org.index for org in orgs], jnp.uint32),
+        org_stack_sharding(mesh, 1))
+    y_dev = jax.device_put(y, org_replicated(mesh))
+    eval_stacks, eval_in_specs = {}, {}
+    if eval_sets:
+        for name, (xs_e, y_e) in eval_sets.items():
+            xe_stack, _ = pad_and_stack_sharded(list(xs_e), mesh,
+                                                pad_to=pad_to)
+            eval_stacks[name] = (xe_stack,
+                                 jax.device_put(y_e, org_replicated(mesh)))
+            eval_in_specs[name] = (P("org"), P())
+
+    def run(key, y_in, x_in, ids_in, evals_in):
+        my_x = x_in[0]                 # this device's org slice (N, d_max)
+        my_id = ids_in[0]
+        pos = jax.lax.axis_index("org")
+
+        def broadcast(r_wire):
+            # step 2 as a REAL collective: only Alice's device (org position
+            # 0) contributes, so the psum equals her privatized residual
+            # exactly while crossing every device boundary
+            return jax.lax.psum(
+                jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
+
+        def fit_orgs(k_round, r_bcast):
+            # THIS device's local fit only (the scan engine's vmap axis
+            # became the mesh axis); RNG key identical to the other engines
+            params_m = model.fit(jax.random.fold_in(k_round, my_id), my_x,
+                                 r_bcast, local_loss)
+            pred_m = model.apply(params_m, my_x)          # (N, K)
+            # step 4's inputs: fitted values gathered back to Alice
+            preds = jax.lax.all_gather(pred_m, "org")     # (M, N, K)
+
+            def combine(w, name):
+                # weighted org-sum as a psum over the mesh axis
+                out_m = pred_m if name is None \
+                    else model.apply(params_m, evals_in[name][0][0])
+                return jax.lax.psum(w[pos] * out_m, "org")
+
+            params_out = jax.tree_util.tree_map(lambda l: l[None], params_m)
+            return params_out, preds, combine
+
+        return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
+                           loss=loss, config=config, m=m, n=n, k=k,
+                           masked=masked, metric_fn=metric_fn,
+                           alice_loss=alice_loss)
+
+    # everything in the scalar bundle is replicated (collectives + identical
+    # per-device programs on replicated inputs); only the per-round params
+    # keep an org axis, split over the mesh
+    out_specs = {"params": P(None, "org"), "eta": P(), "w": P(),
+                 "valid": P(), "train_loss": P()}
     for name in eval_stacks:
-        for kind in ("loss", "metric"):
-            col = f"{name}_{kind}"
-            if col in scalars:
-                history[col] = [float(init[col])] + [
-                    float(v) for v in scalars[col][:n_valid]]
-    return {
-        "params": jax.tree_util.tree_map(lambda l: l[:n_valid], params_stacked),
-        "etas": [float(e) for e in scalars["eta"][:n_valid]],
-        "weights": [jnp.asarray(w) for w in scalars["w"][:n_valid]],
-        "history": history,
-        "dims": dims,
-        "pad_to": pad_to,
+        out_specs[f"{name}_loss"] = P()
+        if metric_fn is not None:
+            out_specs[f"{name}_metric"] = P()
+    run_sharded = shard_map(
+        run, mesh=mesh,
+        in_specs=(P(), P(), P("org"), P("org"), eval_in_specs),
+        out_specs=(out_specs, P()),
+        check_rep=False,
+    )
+    outs, init = jax.jit(run_sharded)(rng, y_dev, x_stack, org_ids,
+                                      eval_stacks)
+    # per-round ledger of the three collectives above, from the (static)
+    # operand shapes — exact ints, Table-14 convention: Alice already holds
+    # her residual copy (M-1 broadcast legs); all M orgs ship fitted values
+    # for the train AND eval prediction stages
+    resid_bytes = n * k * _WIRE_ITEMSIZE
+    comm = {
+        "comm_broadcast_bytes": (m - 1) * resid_bytes,
+        "comm_gather_bytes": m * resid_bytes + sum(
+            m * int(y_e.shape[0]) * k * _WIRE_ITEMSIZE
+            for (_, y_e) in eval_stacks.values()),
     }
+    return _finalize(outs, init, masked, config.rounds, dims, pad_to,
+                     comm=comm)
 
 
 def stacked_predict(model: Any, stacked_params: Any, etas: Sequence[float],

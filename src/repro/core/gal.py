@@ -10,14 +10,21 @@ Per assistance round t:
 
 Prediction stage: F^T(x*) = F^0 + sum_t eta^t sum_m w_m^t f_m^t(x_m*).
 
-Two executions of the same algorithm live here:
+Three executions of the same algorithm live here:
 
-  * the **scan fast path** (``repro.core.engine``): homogeneous orgs are
-    vmapped over stacked slices and the T-round loop is one jitted
-    ``lax.scan`` with a single host sync per ``fit`` — selected automatically
-    (``GALConfig.engine="auto"``) whenever every org shares a scan-safe model
-    config; per-round params come back as a stacked pytree so ``predict`` is
-    one vmap over (rounds x orgs);
+  * the **org-sharded multi-device path** (``repro.core.engine.fit_shard``):
+    the org axis maps onto a real device mesh — one organization per device
+    along an "org" axis; residual broadcast / fitted-value gather /
+    weighted direction run as real collectives, with a per-round
+    communication ledger in ``GALResult.history`` — selected automatically
+    whenever the orgs are scan-compatible AND ``len(orgs)`` divides the
+    (multi-)device count (``GALConfig.engine="shard"`` forces it);
+  * the **scan fast path** (``repro.core.engine.fit_scan``): homogeneous
+    orgs are vmapped over stacked slices and the T-round loop is one jitted
+    ``lax.scan`` with a single host sync per ``fit`` — the automatic choice
+    whenever every org shares a scan-safe model config but no org mesh is
+    available; per-round params come back as a stacked pytree so
+    ``predict`` is one vmap over (rounds x orgs);
   * the **Python reference path**: per-org dispatch in interpreter order,
     kept as the fallback for heterogeneous model-autonomy scenarios, Deep
     Model Sharing, noisy orgs, and non-traceable metrics
@@ -57,11 +64,13 @@ class GALConfig:
     privacy: Optional[str] = None      # None | dp | ip
     privacy_alpha: float = 1.0
     privacy_intervals: int = 1
-    # engine selection: "auto" takes the fused scan path when the orgs are
-    # homogeneous (see engine.scan_compatible); "python" forces the reference
-    # loop; "scan" forces the fast path (raises when incompatible). NOTE the
-    # scan path traces metric_fn — it must be jax-traceable there.
-    engine: str = "auto"               # auto | scan | python
+    # engine selection: "auto" prefers the org-sharded multi-device path
+    # (see engine.shard_eligible), then the fused scan path when the orgs
+    # are homogeneous (see engine.scan_compatible), else the reference
+    # loop; "python" forces the reference loop; "scan"/"shard" force a fast
+    # path (raising when incompatible / no org mesh). NOTE the fast paths
+    # trace metric_fn — it must be jax-traceable there.
+    engine: str = "auto"               # auto | scan | shard | python
 
 
 @dataclass
@@ -105,7 +114,12 @@ class GALResult:
         """Per-(round, org) Python assembly of the prediction stage — the
         reference the stacked path is measured against (benchmarks, serving).
         Needs per-org round params: call ``unpack_to_orgs()`` first on
-        fast-path results, and pad xs to ``pad_to`` columns there."""
+        fast-path results, and pad xs to ``pad_to`` columns there.
+
+        Reads LIVE Organization state: a later ``gal.fit``/``al.fit`` on
+        the same org objects resets it (see
+        ``Organization.reset_round_state``) and invalidates this path for
+        results of earlier fits — refit fresh orgs to keep old results."""
         t_max = self.rounds if rounds is None else min(rounds, self.rounds)
         n = xs[0].shape[0]
         f = jnp.broadcast_to(self.f0, (n, self.f0.shape[-1]))
@@ -138,22 +152,31 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
     validation protocol), producing the per-round curves of Fig. 4."""
-    if config.engine not in ("auto", "scan", "python"):
+    if config.engine not in ("auto", "scan", "shard", "python"):
         raise ValueError(f"unknown engine {config.engine!r}")
+    for org in orgs:
+        org.reset_round_state()  # a refit must not read stale round params
     compatible = engine_mod.scan_compatible(orgs, eval_sets)
+    shard_ok = compatible and engine_mod.shard_eligible(orgs, eval_sets)
     if config.engine == "scan" and not compatible:
         raise ValueError(
             "engine='scan' needs homogeneous scan-safe organizations "
             "(same model config, no DMS/noise, stackable slices)")
+    if config.engine == "shard" and not compatible:
+        raise ValueError(
+            "engine='shard' needs homogeneous scan-safe organizations "
+            "(same model config, no DMS/noise, stackable slices)")
     if (config.engine != "python" and compatible and eval_sets
             and metric_fn is not None
             and not engine_mod.metric_traceable(metric_fn, eval_sets)):
-        if config.engine == "scan":
+        if config.engine in ("scan", "shard"):
             raise ValueError(
-                "engine='scan' requires a jax-traceable metric_fn (it runs "
-                "under jit inside the scanned round step); this metric_fn "
-                "failed jax.eval_shape")
-        compatible = False  # host-side metric: fall back, don't crash the jit
+                f"engine={config.engine!r} requires a jax-traceable "
+                "metric_fn (it runs under jit inside the fused round "
+                "step); this metric_fn failed jax.eval_shape")
+        compatible = shard_ok = False  # host-side metric: fall back cleanly
+    if config.engine == "shard" or (config.engine == "auto" and shard_ok):
+        return _fit_shard(rng, orgs, y, loss, config, eval_sets, metric_fn)
     if config.engine != "python" and compatible:
         return _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
     return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
@@ -161,11 +184,21 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
 
 def _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
     out = engine_mod.fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    return _fast_result(orgs, y, loss, out, "scan")
+
+
+def _fit_shard(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
+    out = engine_mod.fit_shard(rng, orgs, y, loss, config, eval_sets,
+                               metric_fn)
+    return _fast_result(orgs, y, loss, out, "shard")
+
+
+def _fast_result(orgs, y, loss, out, engine: str) -> GALResult:
     return GALResult(
         orgs=orgs, loss=loss, f0=loss.init_prediction(y),
         etas=out["etas"], weights=out["weights"], history=out["history"],
         stacked_params=out["params"], model=orgs[0].model,
-        org_dims=out["dims"], pad_to=out["pad_to"], engine="scan",
+        org_dims=out["dims"], pad_to=out["pad_to"], engine=engine,
     )
 
 

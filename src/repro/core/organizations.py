@@ -37,6 +37,27 @@ class Organization:
     _residual_history: List[jnp.ndarray] = field(default_factory=list)
 
     # ------------------------------------------------------------------ fit
+    def reset_round_state(self) -> None:
+        """Clear all per-round fit state so this Organization can be fit
+        again from scratch.
+
+        Every engine (``gal.fit``, ``al.fit``) calls this at the top of a
+        fit: without it a second fit *appends* to ``_round_params`` /
+        ``_dms_heads``, so ``predict_round(t, ...)`` silently reads round t
+        of the FIRST fit — corrupting rounds sweeps and GAL-after-AL
+        comparisons. The DMS extractor is reset too, so refitting with the
+        same rng reproduces a fresh fit exactly.
+
+        Consequence: refitting INVALIDATES earlier python-engine results
+        built on the same Organization objects — their ``predict`` reads
+        this live state via ``predict_round``. Keep the old result usable
+        by fitting fresh orgs (``make_orgs``) instead. Fast-path results
+        (scan/shard) own their stacked per-round params and stay valid."""
+        self._round_params = []
+        self._dms_extractor = None
+        self._dms_heads = []
+        self._residual_history = []
+
     def fit_round(self, rng: jax.Array, residual: jnp.ndarray) -> jnp.ndarray:
         """Fit this round's local model to the broadcast pseudo-residual and
         return the fitted values f_m^t(x_m) on the training set."""

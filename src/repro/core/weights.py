@@ -21,9 +21,15 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
 
     Pure lax-scan Adam: traces once inside the fused engine's round step.
     theta is pinned to f32 so the simplex softmax stays full precision even
-    when the org outputs arrive in a lower dtype (LM-scale logits)."""
+    when the org outputs arrive in a lower dtype (LM-scale logits).
+
+    ``rng`` seeds the softmax logits theta — a small jitter around the
+    uniform-weights start. Every engine threads ``fold_in(k_round, 29)``
+    here, so the round key fully determines the weight fit (the step-4 leg
+    of the engines' RNG-discipline parity; pinned by
+    tests/test_weights.py)."""
     m = preds.shape[0]
-    theta0 = jnp.zeros((m,), jnp.float32)
+    theta0 = 0.01 * jax.random.normal(rng, (m,), jnp.float32)
 
     def objective(theta):
         w = jax.nn.softmax(theta)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 from typing import List, Sequence
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -99,3 +100,17 @@ def pad_and_stack(xs: Sequence[jnp.ndarray], pad_to: int | None = None
         for x in xs
     ]
     return jnp.stack(padded), dims
+
+
+def pad_and_stack_sharded(xs: Sequence[jnp.ndarray], mesh,
+                          pad_to: int | None = None) -> tuple:
+    """``pad_and_stack`` + placement: split the org-major stack over the
+    mesh's "org" axis, one organization's padded slice per device.
+
+    This is the data layout of the org-sharded GAL engine — org m's
+    vertical slice physically lives on device m, mirroring the paper's
+    decentralized sites; only the round collectives (residual broadcast,
+    fitted-value gather) cross the device boundary."""
+    from repro.launch.sharding import org_stack_sharding
+    stack, dims = pad_and_stack(xs, pad_to=pad_to)
+    return jax.device_put(stack, org_stack_sharding(mesh, stack.ndim)), dims

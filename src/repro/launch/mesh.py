@@ -21,6 +21,27 @@ def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def org_mesh_eligible(m: int) -> bool:
+    """True when an M-organization "org" mesh can be built: every org gets
+    its own device (the paper's physically-separate compute sites), so M
+    must divide the local device count. Single-device hosts and M=1 are
+    never eligible — the collectives would be pure overhead there."""
+    d = len(jax.devices())
+    return 1 < m <= d and d % m == 0
+
+
+def make_org_mesh(m: int):
+    """1-D mesh mapping organization index -> device along an "org" axis.
+
+    Uses the first M local devices, one organization each; callers gate on
+    ``org_mesh_eligible``. The org-sharded GAL engine places each org's
+    vertical slice and per-round params on its device and runs Alg. 1's
+    residual broadcast / fitted-value gather as real collectives over this
+    axis."""
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:m]), ("org",))
+
+
 def data_axes(mesh) -> tuple:
     """The batch-parallel axes of a mesh (pod extends data across pods)."""
     names = mesh.axis_names

@@ -1,8 +1,3 @@
-import os
-if os.environ.get("REPRO_FORCE_DEVICES"):
-    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                               f" --xla_force_host_platform_device_count="
-                               f"{os.environ['REPRO_FORCE_DEVICES']}")
 """Production serving launcher: the GAL Prediction Stage.
 
 Two serving modes:
@@ -13,14 +8,25 @@ Two serving modes:
     homogeneous GAL ensemble on a synthetic vertical split, then serve
     batched predictions through the stacked-round fast path (ONE vmap over
     rounds x orgs per request) and report latency vs the legacy
-    per-(round, org) Python assembly.
+    per-(round, org) Python assembly. ``--engine shard`` fits on the
+    org-sharded multi-device engine (one org per device along an "org"
+    mesh axis) and reports its per-round communication ledger.
 
 Examples (CPU container):
   REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
       --arch rwkv6-7b --smoke --mesh 2,4 --batch 8 --steps 16
   PYTHONPATH=src python -m repro.launch.serve --gal-ensemble \
       --rounds 8 --orgs 4 --batch 256 --steps 32
+  REPRO_FORCE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
+      --gal-ensemble --engine shard --rounds 8 --orgs 4 --batch 256
+
+NOTE: the ``REPRO_FORCE_DEVICES`` shim below must run before the first jax
+operation in the process (see repro/utils/force_devices.py), so it sits
+ahead of every other import.
 """
+from repro.utils.force_devices import apply_force_devices
+apply_force_devices()
+
 import argparse
 import time
 
@@ -30,7 +36,9 @@ import jax.numpy as jnp
 
 def gal_ensemble_serve(args) -> None:
     """Serve the stacked-round GAL ensemble; print ms/request for the fused
-    vmap path next to the legacy per-(round, org) loop."""
+    vmap path next to the legacy per-(round, org) loop. With
+    ``--engine shard`` the fit runs org-sharded across devices and the
+    per-round communication ledger is printed."""
     import numpy as np
     from repro.core import gal
     from repro.core.gal import GALConfig
@@ -46,7 +54,12 @@ def gal_ensemble_serve(args) -> None:
     train, test = train_test_split(ds, rng_np)
     xs = split_features(train.x, args.orgs)
     res = gal.fit(key, make_orgs(xs, Linear()), train.y, get_loss("mse"),
-                  GALConfig(rounds=args.rounds, engine="scan"))
+                  GALConfig(rounds=args.rounds, engine=args.engine))
+    if "comm_broadcast_bytes" in res.history:
+        print(f"gal-ensemble comm ledger ({res.engine}): "
+              f"broadcast={sum(res.history['comm_broadcast_bytes']):.0f} B "
+              f"gathered={sum(res.history['comm_gather_bytes']):.0f} B "
+              f"over {res.rounds} rounds x {len(jax.devices())} devices")
 
     xs_req = [jnp.tile(x, (max(1, args.batch // x.shape[0]) + 1, 1)
                        )[:args.batch] for x in split_features(test.x,
@@ -91,6 +104,10 @@ def main() -> None:
                     help="serve the stacked-round GAL Prediction Stage")
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--orgs", type=int, default=4)
+    ap.add_argument("--engine", default="scan",
+                    choices=("auto", "scan", "shard"),
+                    help="--gal-ensemble fit engine; 'shard' places one org "
+                         "per device (needs orgs | device count)")
     args = ap.parse_args()
 
     if args.gal_ensemble:

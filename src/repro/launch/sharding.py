@@ -229,6 +229,17 @@ def token_sharding(mesh, token_spec, shape: InputShape):
     return NamedSharding(mesh, P(dp if ok else None, None))
 
 
+def org_stack_sharding(mesh, ndim: int) -> NamedSharding:
+    """Org-major stacked arrays (M, ...): leading dim split over the "org"
+    axis so each organization's slice / params / fits live on its device."""
+    return NamedSharding(mesh, P(*(["org"] + [None] * (ndim - 1))))
+
+
+def org_replicated(mesh) -> NamedSharding:
+    """Alice-side values (labels, ensemble carry) every org device holds."""
+    return NamedSharding(mesh, P())
+
+
 def attach(sds_tree, sharding_tree):
     """Return ShapeDtypeStructs carrying shardings (for .lower())."""
     return jax.tree_util.tree_map(

@@ -17,13 +17,16 @@ def mad(y: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
 
 def auroc(y: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
     """Rank-based AUROC for binary labels y in {0,1}, scores = logits.
-    Mann-Whitney U with average ranks for ties."""
+    Mann-Whitney U with EXACT average ranks for ties: each score's rank is
+    the mean of the 1-based positions its tie group spans, so quantized
+    logits / saturated sigmoids score identically regardless of sample
+    order (a bare argsort rank is order-dependent under ties)."""
     y = y.reshape(-1)
     s = scores.reshape(-1)
-    order = jnp.argsort(s)
-    ranks = jnp.empty_like(s).at[order].set(jnp.arange(1, s.shape[0] + 1,
-                                                       dtype=s.dtype))
-    # average tied ranks (approximate: use argsort ranks; exact for unique)
+    s_sorted = jnp.sort(s)
+    lo = jnp.searchsorted(s_sorted, s, side="left")
+    hi = jnp.searchsorted(s_sorted, s, side="right")
+    ranks = 0.5 * (lo + hi + 1).astype(s.dtype)
     n_pos = jnp.sum(y)
     n_neg = y.shape[0] - n_pos
     sum_pos = jnp.sum(ranks * y)

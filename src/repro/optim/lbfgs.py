@@ -16,21 +16,35 @@ _GOLD = 0.6180339887498949  # 1/phi
 
 
 def golden_section(fn, lo: float, hi: float, iters: int = 40):
-    """Minimize scalar fn over [lo, hi] by golden-section search."""
-    lo = jnp.asarray(lo, jnp.float32)
-    hi = jnp.asarray(hi, jnp.float32)
+    """Minimize scalar fn over [lo, hi] by golden-section search.
+
+    The surviving interior probe's value is carried through the loop, so
+    each iteration costs ONE fn evaluation (plus two to seed the bracket)
+    instead of two — each fn eval is a full (N, K) ensemble-loss pass in
+    the GAL engines. The interval still shrinks by 1/phi per iteration:
+    golden spacing makes the kept probe land exactly on one of the next
+    interval's probe points (1/phi^2 == 1 - 1/phi)."""
+    a = jnp.asarray(lo, jnp.float32)
+    b = jnp.asarray(hi, jnp.float32)
+    d = _GOLD * (b - a)
+    x1, x2 = b - d, a + d                 # x1 < x2 interior probes
+    f1, f2 = fn(x1), fn(x2)
 
     def body(_, state):
-        a, b = state
-        d = _GOLD * (b - a)
-        x1 = b - d
-        x2 = a + d
-        f1, f2 = fn(x1), fn(x2)
-        a_new = jnp.where(f1 < f2, a, x1)
-        b_new = jnp.where(f1 < f2, x2, b)
-        return (a_new, b_new)
+        a, b, x1, x2, f1, f2 = state
+        left = f1 < f2                    # min in [a, x2] else [x1, b]
+        a_n = jnp.where(left, a, x1)
+        b_n = jnp.where(left, x2, b)
+        d_n = _GOLD * (b_n - a_n)
+        x_new = jnp.where(left, b_n - d_n, a_n + d_n)
+        f_new = fn(x_new)                 # the ONE fresh eval
+        x1_n = jnp.where(left, x_new, x2)
+        f1_n = jnp.where(left, f_new, f2)
+        x2_n = jnp.where(left, x1, x_new)
+        f2_n = jnp.where(left, f1, f_new)
+        return (a_n, b_n, x1_n, x2_n, f1_n, f2_n)
 
-    a, b = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    a, b, *_ = jax.lax.fori_loop(0, iters, body, (a, b, x1, x2, f1, f2))
     return 0.5 * (a + b)
 
 

@@ -1,0 +1,21 @@
+"""REPRO_FORCE_DEVICES -> XLA_FLAGS shim (the ONE copy of the rule).
+
+``REPRO_FORCE_DEVICES=N`` splits the host CPU into N virtual jax devices —
+how the org-sharded GAL engine, mesh tests, and multi-device serving run in
+a CPU container. XLA reads ``XLA_FLAGS`` lazily when the backend is first
+instantiated, so ``apply_force_devices()`` may run after ``import jax`` but
+MUST run before the first jax operation / ``jax.devices()`` call: invoke it
+at module top, ahead of any jax API use (tests/conftest.py,
+repro/launch/serve.py, the benchmarks shard-scaling subprocess).
+"""
+from __future__ import annotations
+
+import os
+
+
+def apply_force_devices() -> None:
+    n = os.environ.get("REPRO_FORCE_DEVICES")
+    if n:
+        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                                   f" --xla_force_host_platform_device_count"
+                                   f"={n}")

@@ -1,3 +1,9 @@
+# Must run before the first jax operation in the test process: the
+# shard-engine parity suite is exercised with REPRO_FORCE_DEVICES=4, which
+# splits the host CPU into N virtual devices.
+from repro.utils.force_devices import apply_force_devices
+apply_force_devices()
+
 import numpy as np
 import pytest
 import jax

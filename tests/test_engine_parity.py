@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import gal
-from repro.core.engine import scan_compatible
+from repro.core.engine import scan_compatible, shard_eligible
 from repro.core.gal import GALConfig
 from repro.core.losses import get_loss
 from repro.core.organizations import make_orgs
@@ -39,9 +39,12 @@ def _both_engines(key, xs, y, loss, cfg, **kw):
 
 def test_auto_selects_scan_for_homogeneous_orgs(rng_np, key):
     xs, y, _, _ = _setting(rng_np)
-    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
-                  GALConfig(rounds=2))
-    assert res.engine == "scan"
+    orgs = make_orgs(xs, Linear())
+    # on an org mesh (e.g. REPRO_FORCE_DEVICES=4) auto prefers the sharded
+    # engine; both fast paths share the stacked-params contract below
+    expected = "shard" if shard_eligible(orgs) else "scan"
+    res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=2))
+    assert res.engine == expected
     assert res.stacked_params is not None
     # stacked pytree: leaves carry (T, M, ...) leading dims
     leaves = jax.tree_util.tree_leaves(res.stacked_params)
@@ -154,9 +157,10 @@ def test_random_init_models_fall_back_when_padding_needed(rng_np, key):
                   get_loss("mse"), GALConfig(rounds=1))
     assert res.engine == "python"
     xs_equal, y2, _, _ = _setting(rng_np, d=12, n=100)
-    res2 = gal.fit(key, make_orgs(xs_equal, MLP((8,), epochs=10)), y2,
-                   get_loss("mse"), GALConfig(rounds=1))
-    assert res2.engine == "scan"
+    orgs_equal = make_orgs(xs_equal, MLP((8,), epochs=10))
+    expected = "shard" if shard_eligible(orgs_equal) else "scan"
+    res2 = gal.fit(key, orgs_equal, y2, get_loss("mse"), GALConfig(rounds=1))
+    assert res2.engine == expected
 
 
 def test_stacked_predict_rejects_mismatched_slices(rng_np, key):

@@ -1,0 +1,51 @@
+"""Metric correctness, esp. AUROC under tied scores (quantized logits)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.metrics.metrics import accuracy, auroc, mad
+
+
+def test_auroc_hand_computed_tied_case():
+    """Exact average tied ranks, checked against hand-counted pairs:
+    pos scores {0.35, 0.8, 0.4} vs neg {0.1, 0.4, 0.4} ->
+    wins 1+3+1, ties 2x0.5 -> U = 6 of 9 pairs -> AUROC = 2/3."""
+    y = jnp.asarray([0., 0., 1., 1., 1., 0.]).reshape(-1, 1)
+    s = jnp.asarray([0.1, 0.4, 0.35, 0.8, 0.4, 0.4]).reshape(-1, 1)
+    np.testing.assert_allclose(float(auroc(y, s)), 6.0 / 9.0, rtol=1e-6)
+
+
+def test_auroc_order_independent_under_ties():
+    """Pre-fix, bare argsort ranks made tied AUROC depend on sample order."""
+    rng = np.random.default_rng(0)
+    y = (rng.random(64) > 0.5).astype(np.float32)
+    s = np.round(rng.normal(size=64), 1)  # quantized -> many ties
+    base = float(auroc(jnp.asarray(y), jnp.asarray(s)))
+    for seed in range(5):
+        perm = np.random.default_rng(seed).permutation(64)
+        got = float(auroc(jnp.asarray(y[perm]), jnp.asarray(s[perm])))
+        np.testing.assert_allclose(got, base, rtol=1e-6)
+
+
+def test_auroc_all_ties_is_chance():
+    y = jnp.asarray([1., 0., 1., 0.])
+    s = jnp.ones((4,))
+    np.testing.assert_allclose(float(auroc(y, s)), 0.5, atol=1e-6)
+
+
+def test_auroc_perfect_and_inverted_separation():
+    y = jnp.asarray([0., 0., 1., 1.])
+    s = jnp.asarray([-2., -1., 1., 2.])
+    assert float(auroc(y, s)) == 1.0
+    assert float(auroc(y, -s)) == 0.0
+
+
+def test_auroc_degenerate_single_class():
+    y = jnp.zeros((4,))
+    assert float(auroc(y, jnp.arange(4.0))) == 0.5
+
+
+def test_accuracy_and_mad_smoke():
+    y = jnp.asarray([[1., 0.], [0., 1.]])
+    assert float(accuracy(y, jnp.asarray([[2., 1.], [0., 3.]]))) == 100.0
+    np.testing.assert_allclose(
+        float(mad(jnp.zeros((3, 1)), jnp.ones((3, 1)))), 1.0)

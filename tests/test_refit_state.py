@@ -1,0 +1,98 @@
+"""Refit regressions: per-org round state must reset at the top of every fit.
+
+Pre-fix, ``Organization.fit_round`` appended to ``_round_params`` forever, so
+a second ``gal.fit``/``al.fit`` on the same orgs (rounds sweeps, GAL-after-AL
+comparisons) silently offset ``predict_round(t, ...)`` into the FIRST fit's
+params. These tests fail on that behavior and pin the reset.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import al, gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.models.zoo import Linear, MLP
+
+
+def _setting(rng_np, m=4, d=12, n=200):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def test_gal_refit_twice_matches_fresh_orgs(rng_np, key):
+    """Second fit on the SAME orgs == fit on fresh orgs. Pre-fix the reused
+    orgs carry 2x rounds of params and predict from the first fit's."""
+    xs, y, xs_te, _ = _setting(rng_np)
+    loss = get_loss("mse")
+    cfg = GALConfig(rounds=3, engine="python")
+    orgs = make_orgs(xs, Linear())
+    # first fit against a SHIFTED target so its round params are distinct
+    gal.fit(key, orgs, y + 3.0, loss, cfg)
+    res2 = gal.fit(key, orgs, y, loss, cfg)
+    fresh = gal.fit(key, make_orgs(xs, Linear()), y, loss, cfg)
+    assert all(org.n_rounds_fit == cfg.rounds for org in orgs)
+    np.testing.assert_allclose(np.asarray(res2.predict(xs_te)),
+                               np.asarray(fresh.predict(xs_te)),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(res2.history["train_loss"],
+                               fresh.history["train_loss"], rtol=1e-6)
+
+
+def test_al_after_gal_does_not_read_stale_params(rng_np, key):
+    """The paper's GAL-vs-AL comparison reuses org lists; AL must start from
+    clean round state after a GAL fit (and vice versa)."""
+    xs, y, xs_te, _ = _setting(rng_np)
+    loss = get_loss("mse")
+    orgs = make_orgs(xs, Linear())
+    gal.fit(key, orgs, y + 1.0, loss, GALConfig(rounds=2, engine="python"))
+    res = al.fit(key, orgs, y, loss, total_steps=4)
+    fresh = al.fit(key, make_orgs(xs, Linear()), y, loss, total_steps=4)
+    # round-robin over 4 orgs: each org fit exactly once in THIS al.fit
+    assert all(org.n_rounds_fit == 1 for org in orgs)
+    np.testing.assert_allclose(np.asarray(res.predict(xs_te)),
+                               np.asarray(fresh.predict(xs_te)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_dms_refit_resets_heads_and_history(rng_np, key):
+    """DMS state (shared extractor, per-round heads, residual history) must
+    not leak across fits: head count tracks THIS fit's rounds."""
+    xs, y, _, _ = _setting(rng_np, n=80)
+    loss = get_loss("mse")
+    cfg = GALConfig(rounds=2, engine="python")
+    orgs = make_orgs(xs, MLP((8,), epochs=5), dms=True)
+    gal.fit(key, orgs, y, loss, cfg)
+    gal.fit(key, orgs, y, loss, cfg)
+    for org in orgs:
+        assert len(org._dms_heads) == cfg.rounds
+        assert len(org._residual_history) == cfg.rounds
+
+
+def test_fast_path_results_survive_refit(rng_np, key):
+    """Scan/shard results own their stacked per-round params, so a later
+    fit on the same orgs (which resets org state) must not change them."""
+    xs, y, xs_te, _ = _setting(rng_np)
+    loss = get_loss("mse")
+    res1 = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                   GALConfig(rounds=3, engine="scan"))
+    orgs = res1.orgs
+    p1 = np.asarray(res1.predict(xs_te))
+    gal.fit(key, orgs, y + 5.0, loss, GALConfig(rounds=2, engine="python"))
+    np.testing.assert_array_equal(np.asarray(res1.predict(xs_te)), p1)
+
+
+def test_scan_refit_on_same_orgs(rng_np, key):
+    """The fused engines never touch org state during fit, but a preceding
+    python fit (or unpack_to_orgs) must not leak into a later unpack."""
+    xs, y, xs_te, _ = _setting(rng_np)
+    loss = get_loss("mse")
+    orgs = make_orgs(xs, Linear())
+    gal.fit(key, orgs, y + 2.0, loss, GALConfig(rounds=4, engine="python"))
+    res = gal.fit(key, orgs, y, loss, GALConfig(rounds=2, engine="scan"))
+    assert all(org.n_rounds_fit == 0 for org in orgs)  # reset, scan is pure
+    res.unpack_to_orgs()
+    assert all(org.n_rounds_fit == res.rounds for org in orgs)

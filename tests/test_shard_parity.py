@@ -1,0 +1,170 @@
+"""Org-sharded multi-device engine == scan fast path == Python reference.
+
+The shard engine replays Algorithm 1 with identical RNG discipline but maps
+the org axis onto a real device mesh (one organization per device) and runs
+the round's communication as real collectives. For deterministic local fits
+every recorded quantity — etas, assistance weights, train/eval history —
+must agree with the scan engine to float tolerance, and the per-round
+communication ledger must report the Table-14 byte counts.
+
+Run with REPRO_FORCE_DEVICES=4 (the tests/conftest.py shim splits the host
+CPU into virtual devices); on a single device the suite skips.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import gal
+from repro.core.engine import shard_eligible
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.core.protocol_sim import gal_cost
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.metrics.metrics import mad
+from repro.models.zoo import Linear
+
+M = 4
+needs_org_mesh = pytest.mark.skipif(
+    jax.device_count() < M or jax.device_count() % M != 0,
+    reason=f"shard engine needs {M} | device_count; "
+           f"run with REPRO_FORCE_DEVICES={M}")
+
+
+def _setting(rng_np, m=M, d=12, n=200):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def _both(key, xs, y, loss, cfg, **kw):
+    res_sc = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                     dataclasses.replace(cfg, engine="scan"), **kw)
+    res_sh = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                     dataclasses.replace(cfg, engine="shard"), **kw)
+    return res_sc, res_sh
+
+
+@needs_org_mesh
+def test_auto_prefers_shard_on_org_mesh(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=2))
+    assert res.engine == "shard"
+    # per-round params keep the stacked (T, M, ...) contract of the scan path
+    leaves = jax.tree_util.tree_leaves(res.stacked_params)
+    assert all(l.shape[:2] == (2, M) for l in leaves)
+
+
+@needs_org_mesh
+def test_parity_etas_weights_history(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    res_sc, res_sh = _both(key, xs, y, get_loss("mse"), GALConfig(rounds=5),
+                           eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    np.testing.assert_allclose(res_sh.etas, res_sc.etas, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.stack(res_sh.weights),
+                               np.stack(res_sc.weights), atol=1e-4)
+    for col in ("train_loss", "test_loss", "test_metric"):
+        np.testing.assert_allclose(res_sh.history[col], res_sc.history[col],
+                                   rtol=1e-3, atol=1e-4, err_msg=col)
+
+
+@needs_org_mesh
+def test_parity_vs_python_reference(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res_py = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=4, engine="python"))
+    res_sh = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=4, engine="shard"))
+    np.testing.assert_allclose(res_sh.etas, res_py.etas, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res_sh.history["train_loss"],
+                               res_py.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
+
+
+@needs_org_mesh
+def test_parity_on_unequal_split_needs_padding(rng_np, key):
+    """d=13 over 4 orgs -> widths (4,3,3,3); per-device zero-pad is inert."""
+    xs, y, _, _ = _setting(rng_np, d=13)
+    assert len({x.shape[-1] for x in xs}) > 1
+    res_sc, res_sh = _both(key, xs, y, get_loss("mse"), GALConfig(rounds=3))
+    np.testing.assert_allclose(res_sh.etas, res_sc.etas, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(res_sh.history["train_loss"],
+                               res_sc.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
+
+
+@needs_org_mesh
+def test_comm_ledger_matches_protocol_accounting(rng_np, key):
+    """Per-round collective bytes == Table-14 convention (protocol_sim):
+    broadcast (M-1) residual copies, gather M fitted-value tensors."""
+    rounds, n = 3, 200
+    xs, y, _, _ = _setting(rng_np, n=n)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=rounds, engine="shard"))
+    n_tr, k = y.shape[0], y.shape[-1]
+    expect = gal_cost(n_tr, k, M, rounds)
+    bcast = res.history["comm_broadcast_bytes"]
+    gather = res.history["comm_gather_bytes"]
+    assert len(bcast) == len(gather) == rounds
+    assert all(b > 0 for b in bcast) and all(g > 0 for g in gather)
+    assert sum(bcast) == expect.bytes_broadcast
+    assert sum(gather) == expect.bytes_gathered
+
+
+@needs_org_mesh
+def test_comm_ledger_counts_eval_gather(rng_np, key):
+    """Eval-set predictions are also collected over the org axis; the ledger
+    charges them to the gather side on top of the training fitted values."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=2, engine="shard"),
+                  eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    n_tr, n_te, k = y.shape[0], y_te.shape[0], y.shape[-1]
+    per_round = M * (n_tr + n_te) * k * 4
+    assert res.history["comm_gather_bytes"] == [per_round] * 2
+
+
+@needs_org_mesh
+def test_shard_predict_matches_scan_predict(rng_np, key):
+    xs, y, xs_te, _ = _setting(rng_np, d=13)
+    res_sc, res_sh = _both(key, xs, y, get_loss("mse"), GALConfig(rounds=3))
+    np.testing.assert_allclose(np.asarray(res_sh.predict(xs_te)),
+                               np.asarray(res_sc.predict(xs_te)),
+                               rtol=1e-3, atol=1e-4)
+
+
+@needs_org_mesh
+def test_shard_respects_eta_stop_threshold(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=10, eta_stop_threshold=10.0,
+                            engine="shard"))
+    assert res.rounds == 1
+    assert len(res.history["train_loss"]) == 2
+    assert len(res.history["comm_broadcast_bytes"]) == 1
+
+
+@needs_org_mesh
+def test_shard_raises_when_orgs_do_not_divide_devices(rng_np, key):
+    d = jax.device_count()
+    m_bad = d + 1  # never divides d
+    xs, y, _, _ = _setting(rng_np, m=m_bad, d=2 * m_bad)
+    with pytest.raises(ValueError, match="divide"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=1, engine="shard"))
+
+
+def test_shard_ineligible_on_single_device(rng_np, key):
+    """Runs in ANY device configuration: eligibility tracks the mesh rule
+    (M | device_count, multi-device), and auto never crashes."""
+    xs, y, _, _ = _setting(rng_np)
+    orgs = make_orgs(xs, Linear())
+    d = jax.device_count()
+    assert shard_eligible(orgs) == (d > 1 and d % M == 0)
+    res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=1))
+    assert res.engine == ("shard" if shard_eligible(orgs) else "scan")
