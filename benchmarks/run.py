@@ -50,17 +50,20 @@ def micro_benchmarks() -> None:
 
 
 def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
-                         d: int = 16) -> None:
-    """rounds/sec of gal.fit: fused scan engine vs legacy Python engine, plus
-    the stacked-round prediction stage vs the per-(round, org) loop. Timings
-    include compilation — one fit call is the real unit of work."""
+                         d: int = 16, json_rows: list | None = None) -> None:
+    """rounds/sec of gal.fit per engine and scenario — homogeneous Linear,
+    the paper's GB–SVM-style mixed-model set (model autonomy, fused by the
+    org execution planner), and noisy orgs (Table 6) — plus the
+    stacked-round prediction stage vs the per-(round, org) loop. Timings
+    include compilation — one fit call is the real unit of work. Rows are
+    appended to ``json_rows`` for the BENCH_PR3.json artifact."""
     from repro.core import gal
     from repro.core.gal import GALConfig
     from repro.core.losses import get_loss
     from repro.core.organizations import make_orgs
     from repro.data.partition import pad_and_stack, split_features
     from repro.data.synthetic import make_regression, train_test_split
-    from repro.models.zoo import Linear
+    from repro.models.zoo import KernelRidge, Linear, StumpBoost
 
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
@@ -70,24 +73,51 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
     xs_te = split_features(test.x, m)
     loss = get_loss("mse")
 
+    scenarios = {
+        "homogeneous": dict(models=lambda: Linear(), sigmas=None,
+                            engines=("python", "scan")),
+        "hetero_gb_svm_mix": dict(
+            models=lambda: [StumpBoost(n_stumps=20) if i % 2 == 0
+                            else KernelRidge() for i in range(m)],
+            sigmas=None, engines=("python", "grouped")),
+        "noisy": dict(models=lambda: Linear(),
+                      sigmas=[0.0 if i % 2 == 0 else 1.0 for i in range(m)],
+                      engines=("python", "grouped")),
+    }
     results = {}
-    for engine in ("python", "scan"):
-        cfg = GALConfig(rounds=rounds, engine=engine)
-        t0 = time.perf_counter()
-        res = gal.fit(key, make_orgs(xs, Linear()), train.y, loss, cfg)
-        dt = time.perf_counter() - t0
-        results[engine] = res
-        rps = rounds / dt
-        print(f"gal_fit_{engine}_R{rounds}_M{m},{dt / rounds * 1e6:.1f},"
-              f"rounds_per_sec={rps:.2f}")
+    for scen, spec in scenarios.items():
+        for engine in spec["engines"]:
+            cfg = GALConfig(rounds=rounds, engine=engine)
+            orgs = make_orgs(xs, spec["models"](),
+                             noise_sigmas=spec["sigmas"])
+            t0 = time.perf_counter()
+            res = gal.fit(key, orgs, train.y, loss, cfg)
+            dt = time.perf_counter() - t0
+            results[(scen, engine)] = res
+            rps = rounds / dt
+            print(f"gal_fit_{scen}_{engine}_R{rounds}_M{m},"
+                  f"{dt / rounds * 1e6:.1f},rounds_per_sec={rps:.2f}")
+            if json_rows is not None:
+                json_rows.append({
+                    "scenario": scen, "engine": res.engine,
+                    "forced_engine": engine, "rounds": rounds, "orgs": m,
+                    "n": n, "d": d, "seconds": dt, "rounds_per_sec": rps,
+                })
 
-    res = results["scan"]
+    res = results[("homogeneous", "scan")]
     t_pred = _time_call(jax.jit(lambda xq: res.predict(xq)), xs_te)
     print(f"gal_predict_stacked_R{rounds}_M{m},{t_pred:.1f},one-vmap")
     res.unpack_to_orgs()
     xe_stack, _ = pad_and_stack(xs_te, pad_to=res.pad_to)
     t_leg = _time_call(lambda: res.predict_legacy(list(xe_stack)))
     print(f"gal_predict_legacy_R{rounds}_M{m},{t_leg:.1f},per-round-org-loop")
+    if json_rows is not None:
+        json_rows.append({"scenario": "predict_stacked", "engine": "scan",
+                          "rounds": rounds, "orgs": m,
+                          "us_per_call": t_pred})
+        json_rows.append({"scenario": "predict_legacy", "engine": "python",
+                          "rounds": rounds, "orgs": m,
+                          "us_per_call": t_leg})
 
 
 _SHARD_BENCH_SNIPPET = r"""
@@ -126,7 +156,8 @@ print(f"gal_fit_shard_D{{len(jax.devices())}}_R{{rounds}}_M{{m}},"
 
 
 def gal_shard_scaling_benchmark(rounds: int = 8, n: int = 512,
-                                device_counts=(1, 4, 8)) -> None:
+                                device_counts=(1, 4, 8),
+                                json_rows: list | None = None) -> None:
     """rounds/sec of the org-sharded engine at 1/4/8 forced host devices.
 
     Each row runs in a subprocess: --xla_force_host_platform_device_count
@@ -156,7 +187,20 @@ def gal_shard_scaling_benchmark(rounds: int = 8, n: int = 512,
                   f"failed=timeout>600s")
             continue
         if proc.returncode == 0:
-            print(proc.stdout.strip())
+            line = proc.stdout.strip()
+            print(line)
+            if json_rows is not None:
+                try:
+                    derived = dict(kv.split("=", 1) for kv in
+                                   line.split(",")[-1].split(";"))
+                    json_rows.append({
+                        "scenario": "shard_scaling", "devices": n_dev,
+                        "engine": derived.get("engine", "shard"),
+                        "rounds": rounds, "orgs": m,
+                        "rounds_per_sec": float(derived["rounds_per_sec"]),
+                    })
+                except (KeyError, ValueError):
+                    pass
         else:
             tail = proc.stderr.strip().splitlines()[-1:]
             print(f"gal_fit_shard_D{n_dev}_R{rounds}_M{m},nan,"
@@ -184,12 +228,43 @@ def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
         print(f"{a},{s},{m},{tc:.4f},{tm:.4f},{tl:.4f},{dom},{u},{pk:.2f}")
 
 
+def write_bench_json(path: str, rows: list) -> None:
+    """Emit the machine-readable benchmark artifact (BENCH_PR3.json):
+    rounds/sec per engine and scenario — including the heterogeneous
+    GB–SVM-mix row — so CI tracks the perf trajectory across PRs."""
+    payload = {
+        "schema": "gal-bench/v1",
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "rows": rows,
+    }
+    Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"# wrote {path} ({len(rows)} rows)")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="run a single table (table1..table6, fig4, table14)")
     ap.add_argument("--skip-tables", action="store_true")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the engine-benchmark rows as machine-"
+                         "readable JSON (the BENCH_PR3.json CI artifact)")
+    ap.add_argument("--engines-only", action="store_true",
+                    help="run only the GAL engine benchmarks (the fast "
+                         "CI-artifact path): no tables, no micro, no "
+                         "roofline")
     args = ap.parse_args()
+
+    json_rows: list = []
+    if args.engines_only:
+        print("# gal engine benchmarks (name,us_per_round,derived)")
+        gal_engine_benchmark(json_rows=json_rows)
+        print("\n# gal shard engine scaling")
+        gal_shard_scaling_benchmark(json_rows=json_rows)
+        if args.json_out:
+            write_bench_json(args.json_out, json_rows)
+        return
 
     from benchmarks.tables import ALL_TABLES
     print("table,setting,metric,value,check")
@@ -206,16 +281,19 @@ def main() -> None:
     print("\n# microbenchmarks: name,us_per_call,derived")
     micro_benchmarks()
 
-    print("\n# gal engine: fused scan vs legacy python (name,us_per_round,"
-          "derived)")
-    gal_engine_benchmark()
+    print("\n# gal engine: fused engines vs legacy python per scenario "
+          "(name,us_per_round,derived)")
+    gal_engine_benchmark(json_rows=json_rows)
 
     print("\n# gal shard engine scaling: rounds/sec at forced host devices "
           "(name,us_per_round,derived)")
-    gal_shard_scaling_benchmark()
+    gal_shard_scaling_benchmark(json_rows=json_rows)
 
     print("\n# roofline table (from dry-run artifacts)")
     roofline_summary()
+
+    if args.json_out:
+        write_bench_json(args.json_out, json_rows)
 
     if results:
         n_pass = sum(results.values())

@@ -4,15 +4,21 @@ The reference engine in ``repro.core.gal`` executes Algorithm 1 as a Python
 loop: every round pays M Python dispatches for the local fits, a re-traced
 line search, and several ``float()`` host round-trips for history keeping.
 This module compiles the whole assistance stage into ONE device program for
-the homogeneous-organization case (every org: same model class/config, same
-local loss, tabular slices of a shared sample axis, no DMS, no output noise):
+every organization set the execution planner (``repro.core.plan``) can
+partition into homogeneous groups — including the paper's heterogeneous
+scenarios (model autonomy's GB–SVM mix, per-org local ell_q losses, noisy
+orgs). Per traced round:
 
-  * the per-org residual fits of round t are ``jax.vmap``-ed over org-stacked
-    inputs ``(M, N, d_max)`` (vertical slices zero-padded to a common width —
-    inert for the zoo models, see ``repro.data.partition.pad_and_stack``);
-  * one round (residual -> privacy -> fits -> assistance weights -> eta
-    line-search -> ensemble update -> eval bookkeeping) is a single traced
-    step function;
+  * each planner group's residual fits are ``jax.vmap``-ed over that group's
+    stacked inputs ``(M_g, N, d_g)`` (vertical slices zero-padded to a
+    common width *within the group* — inert for pad-invariant fits,
+    width-split groups otherwise; see ``repro.data.partition.stack_groups``);
+  * the group fitted values are concatenated along the org axis — back in
+    original org order — before the step-4 weight fit, so Algorithm 1 sees
+    one (M, N, K) block exactly as the reference engine does;
+  * one round (residual -> privacy -> group fits -> assistance weights ->
+    eta line-search -> ensemble update -> eval bookkeeping) is a single
+    traced step function;
   * the T-round loop is ``jax.lax.scan`` over that step, with etas, weights,
     per-round params and the loss/metric history materialized device-side.
 
@@ -20,10 +26,23 @@ The ONLY host synchronization is a single ``jax.device_get`` of the scalar
 bundle after the scan returns — matching GAL's communication structure
 (orgs are parallel within a round; rounds are sequential).
 
-Two fused executions share that round step structure:
+Noisy organizations (paper Table 6) are traceable end to end: training-stage
+noise uses the same ``fold_in(org_key, 777)`` keys as the reference engine,
+and prediction-stage noise derives from ``fold_in(PRNGKey(org.index), t)``
+(see ``Organization.predict_round``) — no Python ``hash`` anywhere — so the
+grouped engine, the Python loop, and the stacked prediction path all draw
+identical noise for a given (org, round).
 
-  * ``fit_scan`` — the single-device fast path: the org axis is a
-    ``jax.vmap`` over the stacked slices;
+The fused executions share that round step structure:
+
+  * ``fit_grouped`` — the planner-driven engine: one vmap per group inside
+    the shared round step; on a multi-device host where the device count
+    divides every group size, each group's org stack is placed sharded
+    along an "org" mesh axis (``launch.mesh.grouped_mesh_eligible``), so a
+    mixed-model org set maps onto the mesh with one org-shard of every
+    group per device;
+  * ``fit_scan`` — the legacy single-group veneer over ``fit_grouped``
+    (homogeneous orgs, single host);
   * ``fit_shard`` — the org-SHARDED multi-device path
     (``GALConfig.engine="shard"``): the org axis maps onto a real device
     mesh (``repro.launch.mesh.make_org_mesh``, one organization per device
@@ -57,71 +76,28 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.losses import Loss, lq_loss
+from repro.core.plan import ExecutionPlan, plan_orgs
 from repro.core.privacy import apply_privacy
+from repro.core.protocol_sim import gal_round_bytes
 from repro.core.weights import fit_weights, uniform_weights
-from repro.data.partition import pad_and_stack, pad_and_stack_sharded
-from repro.launch.mesh import make_org_mesh, org_mesh_eligible
+from repro.data.partition import (pad_and_stack, pad_and_stack_sharded,
+                                  stack_groups)
+from repro.launch.mesh import (grouped_mesh_eligible, make_org_mesh,
+                               org_mesh_eligible)
 from repro.launch.sharding import org_replicated, org_stack_sharding
 from repro.optim.lbfgs import line_search
-
-_WIRE_ITEMSIZE = 4  # residuals / fitted values travel as f32 on the wire
 
 
 def scan_compatible(orgs: Sequence[Any],
                     eval_sets: Optional[Dict[str, tuple]] = None) -> bool:
-    """True when the fused vmap/scan fast path can run these organizations.
-
-    Requirements: no Deep Model Sharing, no output noise (its prediction-stage
-    noise keys are Python-``hash``-derived, untraceable), one shared scan-safe
-    model config, one shared local ell_q, and org inputs that stack — rank-2
-    slices over a common sample axis (padded) or identical higher-rank shapes.
-    """
-    if not orgs:
-        return False
-    first = orgs[0]
-    for org in orgs:
-        if not getattr(org, "scan_safe", False):
-            return False
-        if type(org.model) is not type(first.model) or org.model != first.model:
-            return False
-        if getattr(org.local_loss, "q", None) is None:
-            return False
-        if getattr(org.local_loss, "q") != getattr(first.local_loss, "q"):
-            return False
-    xs = [org.x_train for org in orgs]
-    if not all(hasattr(x, "ndim") and hasattr(x, "shape") for x in xs):
-        return False
-    if any(x.ndim != xs[0].ndim or x.shape[0] != xs[0].shape[0] for x in xs):
-        return False
-    if xs[0].ndim != 2 and any(x.shape != xs[0].shape for x in xs):
-        return False
-    if xs[0].ndim == 2 and len({int(x.shape[-1]) for x in xs}) > 1:
-        # unequal slices need zero-padding; randomly-initialized fits (MLP,
-        # ConvNet, GRUNet, Linear q!=2) init params at the padded width, so
-        # their draws — and hence auto-mode results — would silently differ
-        # from the reference engine. Only pad-invariant fits stay eligible.
-        inv = getattr(first.model, "pad_invariant", False)
-        if callable(inv):
-            inv = inv(getattr(first.local_loss, "q"))
-        if not inv:
-            return False
-    if eval_sets:
-        train_dims = [int(x.shape[-1]) for x in xs]
-        for xs_e, _ in eval_sets.values():
-            if len(xs_e) != len(orgs):
-                return False
-            if any(x.ndim != xs[0].ndim for x in xs_e):
-                return False
-            if any(x.shape[0] != xs_e[0].shape[0] for x in xs_e):
-                return False
-            if xs[0].ndim == 2:
-                # org m's model is fit on train_dims[m] features; eval slices
-                # must match per-org widths or the apply is semantically wrong
-                if [int(x.shape[-1]) for x in xs_e] != train_dims:
-                    return False
-            elif any(x.shape[1:] != xs[0].shape[1:] for x in xs_e):
-                return False
-    return True
+    """True when the legacy single-group fast path can run these orgs: the
+    planner compiles them into exactly ONE noiseless group (one shared
+    scan-safe model config, one shared ell_q, stackable slices, no DMS).
+    Heterogeneous / noisy / per-loss sets that still compile — as multiple
+    groups — are the grouped engine's territory (``plan_orgs(...).compiled``)
+    and return False here."""
+    p = plan_orgs(orgs, eval_sets)
+    return p.compiled and p.homogeneous
 
 
 def metric_traceable(metric_fn: Callable,
@@ -194,18 +170,20 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
 
       * ``broadcast(r)`` — step 2's residual distribution (identity on the
         vmap engine; a masked psum from Alice's device on the mesh engine);
-      * ``fit_orgs(k_round, r_bcast) -> (params_out, preds, combine)`` —
+      * ``fit_orgs(k_round, r_bcast, t) -> (params_out, preds, combine)`` —
         step 3's parallel fits. ``params_out`` is the per-round params
-        output (M-stacked / org-sharded), ``preds`` the (M, N, K) fitted
-        values handed to the step-4 weight fit, and ``combine(w, name)``
-        the weighted org-sum of fitted values on the train set
-        (``name=None``) or eval set ``name`` (einsum vs psum).
+        output (group-stacked / org-sharded), ``preds`` the (M, N, K)
+        fitted values — in org order — handed to the step-4 weight fit, and
+        ``combine(w, name)`` the weighted org-sum of fitted values on the
+        train set (``name=None``) or eval set ``name`` (einsum vs psum).
+        ``t`` is the 0-based round index, which noisy groups fold into the
+        prediction-stage noise keys.
 
     Everything else — residual, privacy, weight fit, eta line search,
     masked early stopping, history bookkeeping — is engine-independent and
     lives here exactly once.
     """
-    def round_step(carry, _):
+    def round_step(carry, t):
         f, f_evals, key, active = carry
         key, k_round = jax.random.split(key)
         # 1. pseudo-residual  2. privatized broadcast
@@ -216,7 +194,7 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
             n_intervals=config.privacy_intervals,
         ))
         # 3. parallel local fits over the org axis
-        params_out, preds, combine = fit_orgs(k_round, r_bcast)
+        params_out, preds, combine = fit_orgs(k_round, r_bcast, t)
         # 4. gradient assistance weights
         if config.use_weights and m > 1:
             w = fit_weights(
@@ -260,62 +238,146 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
         if metric_fn is not None:
             init[f"{name}_metric"] = metric_fn(y_e, f_evals[name])
     carry0 = (f, f_evals, key, jnp.asarray(True))
-    _, outs = jax.lax.scan(round_step, carry0, None, length=config.rounds)
+    _, outs = jax.lax.scan(round_step, carry0, jnp.arange(config.rounds))
     return outs, init
 
 
-def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
-             config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
-             metric_fn: Optional[Callable] = None) -> Dict[str, Any]:
-    """Run Algorithm 1 as one jitted scan; see the module docstring.
+def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
+                loss: Loss, config: Any,
+                eval_sets: Optional[Dict[str, tuple]] = None,
+                metric_fn: Optional[Callable] = None, *,
+                plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
+    """Run Algorithm 1 as one jitted scan over the planner's groups.
 
-    Returns a dict with device-side stacked per-round ``params`` (leaves
-    ``(T_valid, M, ...)``), host lists ``etas`` / ``weights``, the ``history``
-    dict of Python floats, the padded input width ``pad_to`` and per-org
-    slice widths ``dims`` (both needed to stack prediction-stage inputs).
+    Every group is a ``jax.vmap`` of its own model over its own stacked
+    slice block, all inside the SAME traced round step; group fitted values
+    are concatenated back into org order before the step-4 weight fit, so a
+    heterogeneous GB–SVM mix, per-org ell_q exponents and noisy orgs pay
+    the same single host sync as the homogeneous case. On a multi-device
+    host where the device count divides every group size (and the plan is
+    not a single noiseless group — that case belongs to ``fit_shard``'s
+    real collectives), each group's stack is placed org-sharded along an
+    "org" mesh axis and GSPMD partitions every group's fits across the
+    devices.
+
+    Returns a dict with host lists ``etas`` / ``weights``, the ``history``
+    dict (losses/metrics as floats, the simulated per-round communication
+    ledger as exact ints), device-side per-group stacked params
+    ``group_params`` (leaves ``(T_valid, M_g, ...)``), the per-group
+    ``group_dims`` / ``group_pads`` geometry, and — single-group plans
+    only — the legacy ``params`` / ``dims`` / ``pad_to`` fields.
     """
+    if plan is None:
+        plan = plan_orgs(orgs, eval_sets)
+    if not plan.compiled:
+        raise ValueError(
+            f"cannot compile this organization set: {plan.reason}")
+    groups = plan.groups
     m = len(orgs)
-    model = orgs[0].model
-    local_loss = orgs[0].local_loss
     n, k = y.shape[0], y.shape[-1]
     alice_loss = lq_loss(config.alice_q)
     masked = config.eta_stop_threshold > 0.0
 
-    x_stack, dims = pad_and_stack([org.x_train for org in orgs])
-    pad_to = int(x_stack.shape[-1]) if x_stack.ndim == 3 else None
-    org_ids = jnp.asarray([org.index for org in orgs], jnp.uint32)
+    mesh = None
+    if (not plan.homogeneous
+            and grouped_mesh_eligible([g.size for g in groups])):
+        mesh = make_org_mesh(len(jax.devices()))
+
+    index_groups = [g.indices for g in groups]
+    group_x, group_dims, group_pads = stack_groups(
+        [org.x_train for org in orgs], index_groups, mesh=mesh)
+    group_ids = [jnp.asarray(g.org_ids, jnp.uint32) for g in groups]
+    group_pos = [jnp.asarray(g.indices, jnp.int32) for g in groups]
+    inv_perm = jnp.asarray(plan.inverse_permutation, jnp.int32)
+
+    y_in = y if mesh is None else jax.device_put(y, org_replicated(mesh))
     eval_stacks = {}
     if eval_sets:
         for name, (xs_e, y_e) in eval_sets.items():
-            xe_stack, _ = pad_and_stack(list(xs_e), pad_to=pad_to)
-            eval_stacks[name] = (xe_stack, y_e)
+            stacks_e, _, _ = stack_groups(list(xs_e), index_groups,
+                                          pad_tos=group_pads, mesh=mesh)
+            y_e_in = (y_e if mesh is None
+                      else jax.device_put(y_e, org_replicated(mesh)))
+            eval_stacks[name] = (tuple(stacks_e), y_e_in)
 
-    def run(key, y_in, x_in, evals_in):
-        def fit_orgs(k_round, r_bcast):
-            # one model vmapped over the org stack
-            def fit_one(key_m, x_m):
-                params = model.fit(key_m, x_m, r_bcast, local_loss)
-                return params, model.apply(params, x_m)
+    def run(key, y_dev, xg_in, evals_in):
+        def fit_orgs(k_round, r_bcast, t):
+            # one vmapped model PER GROUP, all in the same traced step
+            params_g, preds_g = [], []
+            for gi, g in enumerate(groups):
+                def fit_one(key_m, x_m, model=g.model, lloss=g.local_loss):
+                    params = model.fit(key_m, x_m, r_bcast, lloss)
+                    return params, model.apply(params, x_m)
 
-            org_keys = jax.vmap(
-                lambda i: jax.random.fold_in(k_round, i))(org_ids)
-            params_t, preds = jax.vmap(fit_one)(org_keys, x_in)  # (M, N, K)
+                keys = jax.vmap(
+                    lambda i: jax.random.fold_in(k_round, i))(group_ids[gi])
+                params_t, preds_t = jax.vmap(fit_one)(keys, xg_in[gi])
+                if g.noise_sigma > 0.0:
+                    # training-stage output noise, reference-engine keys
+                    # (fold_in(org_key, 777), see Organization.fit_round)
+                    preds_t = preds_t + g.noise_sigma * jax.vmap(
+                        lambda kk: jax.random.normal(
+                            jax.random.fold_in(kk, 777), (n, k)))(keys)
+                params_g.append(params_t)
+                preds_g.append(preds_t)
+            # concatenate group blocks back into ORG order for step 4
+            preds = jnp.concatenate(preds_g, axis=0)[inv_perm]   # (M, N, K)
 
             def combine(w, name):
                 if name is None:
                     return jnp.einsum("m,mnk->nk", w, preds)
-                preds_e = jax.vmap(model.apply)(params_t, evals_in[name][0])
-                return jnp.einsum("m,mnk->nk", w, preds_e)
+                out = None
+                for gi, g in enumerate(groups):
+                    pe = jax.vmap(g.model.apply)(params_g[gi],
+                                                 evals_in[name][0][gi])
+                    if g.noise_sigma > 0.0:
+                        # prediction-stage noise, engine-independent keys
+                        # (fold_in(PRNGKey(index), t), see predict_round)
+                        pkeys = jax.vmap(lambda i: jax.random.fold_in(
+                            jax.random.PRNGKey(i), t))(group_ids[gi])
+                        pe = pe + g.noise_sigma * jax.vmap(
+                            lambda kk: jax.random.normal(
+                                kk, pe.shape[1:]))(pkeys)
+                    part = jnp.einsum("m,mnk->nk", w[group_pos[gi]], pe)
+                    out = part if out is None else out + part
+                return out
 
-            return params_t, preds, combine
+            return tuple(params_g), preds, combine
 
-        return _run_rounds(key, y_in, evals_in, lambda r: r, fit_orgs,
+        return _run_rounds(key, y_dev, evals_in, lambda r: r, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
                            masked=masked, metric_fn=metric_fn,
                            alice_loss=alice_loss)
 
-    outs, init = jax.jit(run)(rng, y, x_stack, eval_stacks)
-    return _finalize(outs, init, masked, config.rounds, dims, pad_to)
+    outs, init = jax.jit(run)(rng, y_in, tuple(group_x), eval_stacks)
+    bcast_b, gather_b = gal_round_bytes(
+        n, k, m, [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
+    single = len(groups) == 1
+    out = _finalize(outs, init, masked, config.rounds,
+                    dims=group_dims[0] if single else None,
+                    pad_to=group_pads[0] if single else None,
+                    comm={"comm_broadcast_bytes": bcast_b,
+                          "comm_gather_bytes": gather_b})
+    group_params = list(out["params"])            # tuple trimmed by _finalize
+    out["params"] = group_params[0] if single else None
+    out["group_params"] = group_params
+    out["group_dims"] = group_dims
+    out["group_pads"] = group_pads
+    out["plan"] = plan
+    out["mesh_devices"] = 0 if mesh is None else len(jax.devices())
+    return out
+
+
+def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
+             config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
+             metric_fn: Optional[Callable] = None, *,
+             plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
+    """The legacy homogeneous fast path: ``fit_grouped`` on a single-group
+    plan (one model vmapped over one org stack). Kept as the named engine
+    behind ``GALConfig.engine="scan"``; the dispatch in ``gal.fit`` enforces
+    the single-noiseless-group contract before calling it."""
+    return fit_grouped(rng, orgs, y, loss, config, eval_sets, metric_fn,
+                       plan=plan)
 
 
 def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
@@ -373,7 +435,8 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
             return jax.lax.psum(
                 jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
 
-        def fit_orgs(k_round, r_bcast):
+        def fit_orgs(k_round, r_bcast, t):
+            del t  # single noiseless group: no prediction-stage noise keys
             # THIS device's local fit only (the scan engine's vmap axis
             # became the mesh axis); RNG key identical to the other engines
             params_m = model.fit(jax.random.fold_in(k_round, my_id), my_x,
@@ -414,46 +477,65 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     outs, init = jax.jit(run_sharded)(rng, y_dev, x_stack, org_ids,
                                       eval_stacks)
     # per-round ledger of the three collectives above, from the (static)
-    # operand shapes — exact ints, Table-14 convention: Alice already holds
-    # her residual copy (M-1 broadcast legs); all M orgs ship fitted values
-    # for the train AND eval prediction stages
-    resid_bytes = n * k * _WIRE_ITEMSIZE
-    comm = {
-        "comm_broadcast_bytes": (m - 1) * resid_bytes,
-        "comm_gather_bytes": m * resid_bytes + sum(
-            m * int(y_e.shape[0]) * k * _WIRE_ITEMSIZE
-            for (_, y_e) in eval_stacks.values()),
-    }
+    # operand shapes — exact ints, Table-14 convention (Alice already holds
+    # her residual copy; all M orgs ship fitted values for the train AND
+    # eval prediction stages). gal_round_bytes is the one formula every
+    # engine's ledger comes from, so the history is engine-independent.
+    bcast_b, gather_b = gal_round_bytes(
+        n, k, m, [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()])
     return _finalize(outs, init, masked, config.rounds, dims, pad_to,
-                     comm=comm)
+                     comm={"comm_broadcast_bytes": bcast_b,
+                           "comm_gather_bytes": gather_b})
 
 
-def stacked_predict(model: Any, stacked_params: Any, etas: Sequence[float],
-                    weights: Sequence[jnp.ndarray], f0: jnp.ndarray,
-                    xs: Sequence[jnp.ndarray], pad_to: Optional[int],
-                    t_max: int,
-                    org_dims: Optional[Sequence[int]] = None) -> jnp.ndarray:
-    """Prediction stage as ONE vmap over (rounds x orgs).
+def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],
+                    group_dims: Sequence[Sequence[int]],
+                    group_pads: Sequence[Optional[int]],
+                    etas: Sequence[float], weights: Sequence[jnp.ndarray],
+                    f0: jnp.ndarray, xs: Sequence[jnp.ndarray],
+                    t_max: int) -> jnp.ndarray:
+    """Prediction stage for a planner-grouped ensemble.
 
-    F^T(x*) = F^0 + sum_t eta^t sum_m w^t_m f^t_m(x*_m), with the (T, M)
-    ensemble applied by a nested vmap and contracted in a single einsum —
-    no per-(round, org) Python dispatch.
+    Per group: one nested (rounds x group-orgs) vmap of the group's model
+    over its stacked slices, contracted with that group's slice of the
+    assistance weights in a single einsum — then summed over groups. Noisy
+    groups add the engine-independent prediction-stage noise
+    (``fold_in(PRNGKey(org.index), t)``, matching
+    ``Organization.predict_round``), so grouped predictions equal the
+    Python reference assembly draw for draw.
     """
-    if org_dims is not None and xs[0].ndim == 2:
-        # the zero-pad would silently swallow mis-sized/mis-ordered slices
-        # that the reference engine rejects with a shape error — keep that net
-        got = [int(x.shape[-1]) for x in xs]
-        if got != list(org_dims):
-            raise ValueError(
-                f"prediction slice widths {got} do not match the fitted "
-                f"per-org widths {list(org_dims)} (check org order)")
     n = xs[0].shape[0]
-    f = jnp.broadcast_to(f0, (n, f0.shape[-1]))
+    k = f0.shape[-1]
+    f = jnp.broadcast_to(f0, (n, k))
     if t_max == 0:
         return f
-    x_stack, _ = pad_and_stack(list(xs), pad_to=pad_to)
-    params_t = jax.tree_util.tree_map(lambda l: l[:t_max], stacked_params)
-    preds = jax.vmap(lambda p: jax.vmap(model.apply)(p, x_stack))(params_t)
     etas_t = jnp.asarray(etas[:t_max], jnp.float32)
-    w_t = jnp.stack(list(weights[:t_max]))
-    return f + jnp.einsum("t,tm,tmnk->nk", etas_t, w_t, preds)
+    w_t = jnp.stack(list(weights[:t_max]))                       # (T, M)
+    out = f
+    for gi, g in enumerate(groups):
+        xs_g = [xs[i] for i in g.indices]
+        if xs_g[0].ndim == 2:
+            # the zero-pad would silently swallow mis-sized/mis-ordered
+            # slices that the reference engine rejects — keep that net
+            got = [int(x.shape[-1]) for x in xs_g]
+            if got != [int(d) for d in group_dims[gi]]:
+                raise ValueError(
+                    f"prediction slice widths {got} do not match the "
+                    f"fitted per-org widths {list(group_dims[gi])} of "
+                    f"group {g.describe()} (check org order)")
+        x_stack, _ = pad_and_stack(xs_g, pad_to=group_pads[gi])
+        params_t = jax.tree_util.tree_map(lambda l: l[:t_max],
+                                          group_params[gi])
+        preds = jax.vmap(
+            lambda p, model=g.model: jax.vmap(model.apply)(p, x_stack)
+        )(params_t)                                              # (T,Mg,N,K)
+        if g.noise_sigma > 0.0:
+            ids = jnp.asarray(g.org_ids, jnp.uint32)
+            noise = jax.vmap(lambda t: jax.vmap(
+                lambda i: jax.random.normal(
+                    jax.random.fold_in(jax.random.PRNGKey(i), t), (n, k))
+            )(ids))(jnp.arange(t_max))
+            preds = preds + g.noise_sigma * noise
+        out = out + jnp.einsum("t,tm,tmnk->nk", etas_t,
+                               w_t[:, jnp.asarray(g.indices)], preds)
+    return out

@@ -10,25 +10,37 @@ Per assistance round t:
 
 Prediction stage: F^T(x*) = F^0 + sum_t eta^t sum_m w_m^t f_m^t(x_m*).
 
-Three executions of the same algorithm live here:
+Engine selection is driven by the org execution planner
+(``repro.core.plan.plan_orgs``), which partitions the organizations into
+homogeneous groups (model signature, local ell_q, noise sigma, slice rank)
+or names the reason the compiled engines cannot run. Four executions of the
+same algorithm live here:
 
   * the **org-sharded multi-device path** (``repro.core.engine.fit_shard``):
-    the org axis maps onto a real device mesh — one organization per device
-    along an "org" axis; residual broadcast / fitted-value gather /
-    weighted direction run as real collectives, with a per-round
-    communication ledger in ``GALResult.history`` — selected automatically
-    whenever the orgs are scan-compatible AND ``len(orgs)`` divides the
-    (multi-)device count (``GALConfig.engine="shard"`` forces it);
-  * the **scan fast path** (``repro.core.engine.fit_scan``): homogeneous
-    orgs are vmapped over stacked slices and the T-round loop is one jitted
-    ``lax.scan`` with a single host sync per ``fit`` — the automatic choice
-    whenever every org shares a scan-safe model config but no org mesh is
-    available; per-round params come back as a stacked pytree so
-    ``predict`` is one vmap over (rounds x orgs);
-  * the **Python reference path**: per-org dispatch in interpreter order,
-    kept as the fallback for heterogeneous model-autonomy scenarios, Deep
-    Model Sharing, noisy orgs, and non-traceable metrics
-    (``GALConfig.engine="python"`` forces it).
+    single-group noiseless plans with the org axis mapped onto a real
+    device mesh — one organization per device along an "org" axis; residual
+    broadcast / fitted-value gather / weighted direction run as real
+    collectives (``GALConfig.engine="shard"`` forces it);
+  * the **grouped fused engine** (``repro.core.engine.fit_grouped``): ANY
+    plan the planner compiles — heterogeneous model autonomy (the paper's
+    GB–SVM mix), per-org local ell_q exponents, noisy orgs — one vmap per
+    group inside the same scanned round step, group fitted values
+    concatenated in org order before the weight fit, single host sync per
+    ``fit``; on a matching device count the group stacks shard over an
+    "org" mesh (``GALConfig.engine="grouped"`` forces it);
+  * the **scan fast path** (``repro.core.engine.fit_scan``): the legacy
+    single-group veneer over the grouped engine for homogeneous orgs
+    (``GALConfig.engine="scan"`` forces it);
+  * the **Python reference path**: per-org dispatch in interpreter order —
+    the remaining TRUE fallbacks are Deep Model Sharing, non-scan-safe
+    models, non-ell_q local losses, unstackable inputs and host-side
+    metrics (``GALConfig.engine="python"`` forces it).
+
+Every engine records the per-round communication ledger
+(``history["comm_broadcast_bytes"/"comm_gather_bytes"]``) under the paper's
+Table-14 convention via ``repro.core.protocol_sim.gal_round_bytes`` — the
+shard engine's numbers come from its real collective operand shapes, the
+other engines simulate the identical wire protocol.
 """
 from __future__ import annotations
 
@@ -41,9 +53,14 @@ import jax.numpy as jnp
 from repro.core import engine as engine_mod
 from repro.core.losses import Loss, lq_loss
 from repro.core.organizations import Organization
+from repro.core.plan import ExecutionPlan, plan_orgs
 from repro.core.privacy import apply_privacy
+from repro.core.protocol_sim import gal_round_bytes
 from repro.core.weights import fit_weights, uniform_weights
+from repro.launch.mesh import org_mesh_eligible
 from repro.optim.lbfgs import line_search
+
+_COMPILED_ENGINES = ("scan", "shard", "grouped")
 
 
 @dataclass(frozen=True)
@@ -64,13 +81,16 @@ class GALConfig:
     privacy: Optional[str] = None      # None | dp | ip
     privacy_alpha: float = 1.0
     privacy_intervals: int = 1
-    # engine selection: "auto" prefers the org-sharded multi-device path
-    # (see engine.shard_eligible), then the fused scan path when the orgs
-    # are homogeneous (see engine.scan_compatible), else the reference
-    # loop; "python" forces the reference loop; "scan"/"shard" force a fast
-    # path (raising when incompatible / no org mesh). NOTE the fast paths
-    # trace metric_fn — it must be jax-traceable there.
-    engine: str = "auto"               # auto | scan | shard | python
+    # engine selection: "auto" asks the planner (repro.core.plan) and picks
+    # the most capable engine that applies — org-sharded collectives for a
+    # single noiseless group on an org mesh, the scan fast path for a
+    # single noiseless group on one host, the grouped fused engine for any
+    # other compilable plan (heterogeneous models, per-org ell_q, noisy
+    # orgs), else the Python reference loop. "python" forces the reference
+    # loop; "scan"/"shard"/"grouped" force a compiled engine, raising with
+    # the planner's ineligibility reason when it cannot run. NOTE the
+    # compiled engines trace metric_fn — it must be jax-traceable there.
+    engine: str = "auto"               # auto | scan | shard | grouped | python
 
 
 @dataclass
@@ -81,13 +101,23 @@ class GALResult:
     etas: List[float] = field(default_factory=list)
     weights: List[jnp.ndarray] = field(default_factory=list)
     history: Dict[str, List[float]] = field(default_factory=dict)
-    # scan fast path extras: per-round params as ONE stacked pytree with
-    # leaves (T, M, ...), the shared model that applies them, and the padded
-    # input geometry needed to stack prediction-stage slices.
+    # compiled-engine extras. Single-group results keep the legacy fields:
+    # per-round params as ONE stacked pytree with leaves (T, M, ...), the
+    # shared model that applies them, and the padded input geometry needed
+    # to stack prediction-stage slices.
     stacked_params: Any = None
     model: Any = None
     org_dims: Optional[List[int]] = None
     pad_to: Optional[int] = None
+    # planner-grouped results (any compiled engine): the ExecutionPlan that
+    # ran, per-GROUP stacked params (list of pytrees, leaves (T, M_g, ...))
+    # and per-group stacking geometry; prediction stays one vmap+einsum per
+    # group (engine.grouped_predict).
+    plan: Optional[ExecutionPlan] = None
+    group_params: Optional[List[Any]] = None
+    group_dims: Optional[List[List[int]]] = None
+    group_pads: Optional[List[Optional[int]]] = None
+    mesh_devices: int = 0              # devices the group stacks sharded over
     engine: str = "python"
 
     @property
@@ -102,10 +132,11 @@ class GALResult:
         nested vmap + one einsum; reference results loop per (round, org).
         """
         t_max = self.rounds if rounds is None else min(rounds, self.rounds)
-        if self.stacked_params is not None:
-            return engine_mod.stacked_predict(
-                self.model, self.stacked_params, self.etas, self.weights,
-                self.f0, xs, self.pad_to, t_max, org_dims=self.org_dims,
+        if self.group_params is not None and self.plan is not None:
+            return engine_mod.grouped_predict(
+                self.plan.groups, self.group_params, self.group_dims,
+                self.group_pads, self.etas, self.weights, self.f0, xs,
+                t_max,
             )
         return self.predict_legacy(xs, rounds)
 
@@ -133,8 +164,19 @@ class GALResult:
     def unpack_to_orgs(self) -> None:
         """Copy fast-path per-round params back into the Organization objects
         so legacy per-(round, org) flows (``predict_round``) work. The params
-        were fit on slices zero-padded to ``pad_to`` columns — pad inputs with
-        ``repro.data.partition.pad_and_stack`` before applying them."""
+        were fit on slices zero-padded to each group's pad width (``pad_to``
+        for single-group results, ``group_pads[g]`` otherwise) — pad inputs
+        with ``repro.data.partition.pad_and_stack`` before applying them."""
+        if self.group_params is not None and self.plan is not None:
+            for gi, g in enumerate(self.plan.groups):
+                for j, i in enumerate(g.indices):
+                    self.orgs[i]._round_params = [
+                        jax.tree_util.tree_map(
+                            lambda l, t=t, j=j: l[t, j],
+                            self.group_params[gi])
+                        for t in range(self.rounds)
+                    ]
+            return
         if self.stacked_params is None:
             return
         for i, org in enumerate(self.orgs):
@@ -151,54 +193,109 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         metric_fn: Optional[Callable] = None) -> GALResult:
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
-    validation protocol), producing the per-round curves of Fig. 4."""
-    if config.engine not in ("auto", "scan", "shard", "python"):
+    validation protocol), producing the per-round curves of Fig. 4.
+
+    Engine dispatch is planner-driven: ``repro.core.plan.plan_orgs``
+    partitions the orgs into homogeneous groups or names the reason the
+    compiled engines cannot run; forcing a compiled engine on an
+    uncompilable set raises that reason verbatim."""
+    if config.engine not in ("auto", "python") + _COMPILED_ENGINES:
         raise ValueError(f"unknown engine {config.engine!r}")
     for org in orgs:
         org.reset_round_state()  # a refit must not read stale round params
-    compatible = engine_mod.scan_compatible(orgs, eval_sets)
-    shard_ok = compatible and engine_mod.shard_eligible(orgs, eval_sets)
-    if config.engine == "scan" and not compatible:
-        raise ValueError(
-            "engine='scan' needs homogeneous scan-safe organizations "
-            "(same model config, no DMS/noise, stackable slices)")
-    if config.engine == "shard" and not compatible:
-        raise ValueError(
-            "engine='shard' needs homogeneous scan-safe organizations "
-            "(same model config, no DMS/noise, stackable slices)")
-    if (config.engine != "python" and compatible and eval_sets
+    plan = plan_orgs(orgs, eval_sets)
+    if (plan.compiled and config.engine != "python" and eval_sets
             and metric_fn is not None
             and not engine_mod.metric_traceable(metric_fn, eval_sets)):
-        if config.engine in ("scan", "shard"):
+        if config.engine in _COMPILED_ENGINES:
             raise ValueError(
                 f"engine={config.engine!r} requires a jax-traceable "
                 "metric_fn (it runs under jit inside the fused round "
                 "step); this metric_fn failed jax.eval_shape")
-        compatible = shard_ok = False  # host-side metric: fall back cleanly
-    if config.engine == "shard" or (config.engine == "auto" and shard_ok):
-        return _fit_shard(rng, orgs, y, loss, config, eval_sets, metric_fn)
-    if config.engine != "python" and compatible:
-        return _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
-    return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+        plan = plan.fallback(
+            "metric_fn is not jax-traceable (failed jax.eval_shape): "
+            "the history needs host-side evaluation")
+    if not plan.compiled:
+        if config.engine in _COMPILED_ENGINES:
+            # the ONE ineligibility path for every compiled engine: the
+            # planner's human-readable reason, verbatim
+            raise ValueError(
+                f"engine={config.engine!r} cannot compile these "
+                f"organizations: {plan.reason}")
+        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    if config.engine == "python":
+        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    if config.engine == "scan":
+        if not plan.homogeneous:
+            raise ValueError(
+                "engine='scan' runs ONE noiseless homogeneous group; the "
+                f"planner found {plan.describe()} — use engine='grouped' "
+                "(or 'auto') to fuse heterogeneous/noisy organizations")
+        return _fit_fast(engine_mod.fit_scan, "scan", plan,
+                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+    if config.engine == "shard":
+        if plan.homogeneous:
+            # fit_shard itself raises the org-mesh "must divide" error
+            return _fit_fast(engine_mod.fit_shard, "shard", plan,
+                             rng, orgs, y, loss, config, eval_sets,
+                             metric_fn)
+        return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
+                         rng, orgs, y, loss, config, eval_sets, metric_fn,
+                         require_mesh=True)
+    if config.engine == "grouped":
+        return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
+                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+    # auto: most capable engine that applies
+    if plan.homogeneous and org_mesh_eligible(len(orgs)):
+        return _fit_fast(engine_mod.fit_shard, "shard", plan,
+                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+    if plan.homogeneous:
+        return _fit_fast(engine_mod.fit_scan, "scan", plan,
+                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+    return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
+                     rng, orgs, y, loss, config, eval_sets, metric_fn)
 
 
-def _fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
-    out = engine_mod.fit_scan(rng, orgs, y, loss, config, eval_sets, metric_fn)
-    return _fast_result(orgs, y, loss, out, "scan")
+def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
+              metric_fn, require_mesh: bool = False) -> GALResult:
+    if engine_fn is engine_mod.fit_shard:
+        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metric_fn)
+    else:
+        if require_mesh:
+            from repro.launch.mesh import grouped_mesh_eligible
+            if not grouped_mesh_eligible([g.size for g in plan.groups]):
+                raise ValueError(
+                    f"engine='shard' on a {plan.n_groups}-group plan needs "
+                    f"the device count ({len(jax.devices())}) to divide "
+                    f"every group size {[g.size for g in plan.groups]} on "
+                    "a multi-device host; use engine='grouped' for the "
+                    "single-host fused path")
+        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metric_fn,
+                        plan=plan)
+    return _fast_result(orgs, y, loss, out, name, plan)
 
 
-def _fit_shard(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
-    out = engine_mod.fit_shard(rng, orgs, y, loss, config, eval_sets,
-                               metric_fn)
-    return _fast_result(orgs, y, loss, out, "shard")
-
-
-def _fast_result(orgs, y, loss, out, engine: str) -> GALResult:
+def _fast_result(orgs, y, loss, out, engine: str,
+                 plan: ExecutionPlan) -> GALResult:
+    single = plan.n_groups == 1
+    group_params = out.get("group_params")
+    if group_params is None:            # fit_shard: legacy single-stack dict
+        group_params = [out["params"]]
+        group_dims = [out["dims"]]
+        group_pads = [out["pad_to"]]
+    else:
+        group_dims = out["group_dims"]
+        group_pads = out["group_pads"]
     return GALResult(
         orgs=orgs, loss=loss, f0=loss.init_prediction(y),
         etas=out["etas"], weights=out["weights"], history=out["history"],
-        stacked_params=out["params"], model=orgs[0].model,
-        org_dims=out["dims"], pad_to=out["pad_to"], engine=engine,
+        stacked_params=out.get("params") if single else None,
+        model=plan.groups[0].model if single else None,
+        org_dims=group_dims[0] if single else None,
+        pad_to=group_pads[0] if single else None,
+        plan=plan, group_params=group_params, group_dims=group_dims,
+        group_pads=group_pads, mesh_devices=out.get("mesh_devices", 0),
+        engine=engine,
     )
 
 
@@ -220,6 +317,14 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
             hist[f"{name}_loss"] = [float(loss(y_e, f_evals[name]))]
             if metric_fn is not None:
                 hist[f"{name}_metric"] = [float(metric_fn(y_e, f_evals[name]))]
+    # simulated per-round communication ledger (Table-14 convention, same
+    # formula as the shard engine's real collective shapes) — appended per
+    # EXECUTED round so early stopping trims it like the fused engines do
+    bcast_b, gather_b = gal_round_bytes(
+        n, k, len(orgs),
+        [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
+    hist["comm_broadcast_bytes"] = []
+    hist["comm_gather_bytes"] = []
 
     for t in range(config.rounds):
         rng, k_round = jax.random.split(rng)
@@ -255,6 +360,8 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
         result.etas.append(float(eta))
         result.weights.append(w)
         hist["train_loss"].append(float(loss(y, f_train)))
+        hist["comm_broadcast_bytes"].append(bcast_b)
+        hist["comm_gather_bytes"].append(gather_b)
         if eval_sets:
             for name, (xs_e, y_e) in eval_sets.items():
                 preds_e = jnp.stack([

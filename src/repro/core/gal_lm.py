@@ -38,6 +38,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.losses import CrossEntropyLoss
+from repro.core.plan import plan_lm_orgs
 from repro.core.weights import fit_weights, uniform_weights
 from repro.kernels.ops import residual_xent
 from repro.models import transformer as tfm
@@ -110,11 +111,11 @@ def scan_compatible(orgs: List[LMOrganization]) -> bool:
     local learning rate (org 0's train step is vmapped over ALL org params,
     so differing optimizer settings would silently be overridden), and
     initialized params. View functions may differ — views are stacked,
-    not the fns."""
-    return bool(orgs) and all(
-        org.cfg == orgs[0].cfg and org.lr == orgs[0].lr
-        and org.params is not None and org._train_step is not None
-        for org in orgs)
+    not the fns. Eligibility comes from the same execution planner as the
+    tabular engines (``repro.core.plan.plan_lm_orgs``): compiled AND a
+    single (cfg, lr) group."""
+    plan = plan_lm_orgs(orgs)
+    return plan.compiled and plan.n_groups == 1
 
 
 def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
@@ -129,10 +130,12 @@ def fit_lm(rng: jax.Array, orgs: List[LMOrganization], tokens: jnp.ndarray,
     """
     if engine not in ("auto", "scan", "python"):
         raise ValueError(f"unknown engine {engine!r}")
-    compatible = scan_compatible(orgs)
+    plan = plan_lm_orgs(orgs)
+    compatible = plan.compiled and plan.n_groups == 1
     if engine == "scan" and not compatible:
-        raise ValueError("engine='scan' needs one shared, initialized "
-                         "architecture config across orgs")
+        raise ValueError(
+            "engine='scan' needs one shared, initialized architecture "
+            f"config across orgs: {plan.reason or plan.describe()}")
     if engine != "python" and compatible:
         return _fit_lm_scan(rng, orgs, tokens, labels, rounds, local_steps,
                             eta_method, use_weights, use_kernel)

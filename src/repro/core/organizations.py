@@ -120,8 +120,12 @@ class Organization:
         else:
             out = self.model.apply(self._round_params[t], x)
         if self.noise_sigma > 0.0:
-            # Table 6 injects noise during learning AND prediction
-            key = jax.random.PRNGKey(hash((self.index, t)) % (2**31))
+            # Table 6 injects noise during learning AND prediction. The key
+            # is derived with fold_in (NOT Python hash) so it is traceable
+            # under jit/vmap with a traced round index t, and every engine —
+            # this Python path, the grouped fused engine, the stacked
+            # prediction path — draws the identical noise for (org, round).
+            key = jax.random.fold_in(jax.random.PRNGKey(self.index), t)
             out = out + self.noise_sigma * jax.random.normal(key, out.shape)
         return out
 
@@ -131,12 +135,12 @@ class Organization:
 
     @property
     def scan_safe(self) -> bool:
-        """True when this org can join the fused engine's org-stack: fresh
-        per-round fits of a pure-jnp (``scan_safe``) model, no DMS state
-        (its head list grows per round), and no output noise (its
-        prediction-stage keys are Python-``hash``-derived, untraceable)."""
-        return (not self.dms and self.noise_sigma == 0.0
-                and getattr(self.model, "scan_safe", False))
+        """True when this org can join a compiled engine group: fresh
+        per-round fits of a pure-jnp (``scan_safe``) model and no DMS state
+        (its head list grows per round). Output noise no longer blocks
+        compilation — its keys are ``fold_in``-derived and traceable; the
+        planner (``repro.core.plan``) groups noisy orgs by sigma."""
+        return not self.dms and getattr(self.model, "scan_safe", False)
 
 
 def make_orgs(xs, model_factory, local_losses=None, dms: bool = False,

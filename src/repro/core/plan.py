@@ -1,0 +1,280 @@
+"""Org execution planner: who can share a compiled group, and why not.
+
+The fused GAL engines (``repro.core.engine``) trace ONE round step and scan
+it; until this module existed that was only possible when every organization
+shared a single model config — the paper's heterogeneous scenarios (model
+autonomy, per-org local losses, noisy orgs, Table 5/6) all fell back to the
+Python reference loop. The planner dissolves that wall: it partitions the
+organizations into *homogeneous groups* keyed by
+
+    (model signature, local-loss exponent q, noise sigma, slice rank
+     [, slice width when the model's random init is width-dependent,
+      trailing shape for higher-rank inputs])
+
+so that each group can be ``jax.vmap``-ed over one stacked input block, and
+ALL groups run inside the *same* traced round step — their fitted values
+concatenated along the org axis (in original org order) before the step-4
+weight fit. A plan either *compiles* (``plan.compiled``) or carries a
+human-readable ``reason`` naming the first organization that forces the
+Python fallback (Deep Model Sharing, a non-scan-safe model, a local loss
+with no ell_q exponent, inputs that do not share a sample axis). Width- or
+shape-driven splits never block compilation — they just produce more groups,
+recorded in ``plan.notes``.
+
+``repro.core.gal.fit`` dispatches purely on the plan; ``plan_lm_orgs``
+applies the same grouping to the LM-scale path (``repro.core.gal_lm``),
+whose fused engine additionally requires a single group.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class OrgGroup:
+    """One homogeneous slice of the org list: same model config, same local
+    ell_q, same noise sigma, stackable inputs. ``indices`` are positions in
+    the fitted org list (the engine's concat/permutation coordinates);
+    ``org_ids`` are the ``Organization.index`` values (the RNG identity each
+    engine folds into the round key)."""
+    indices: Tuple[int, ...]
+    org_ids: Tuple[int, ...]
+    model: Any
+    local_loss: Any
+    noise_sigma: float = 0.0
+
+    @property
+    def size(self) -> int:
+        return len(self.indices)
+
+    def describe(self) -> str:
+        q = getattr(self.local_loss, "q", None)
+        bits = [f"{type(self.model).__name__} x{self.size}"]
+        if q is not None:
+            bits.append(f"q={float(q):g}")
+        if self.noise_sigma:
+            bits.append(f"sigma={float(self.noise_sigma):g}")
+        return " ".join(bits)
+
+
+@dataclass(frozen=True)
+class ExecutionPlan:
+    """The planner's verdict: the group partition plus, when the compiled
+    engines cannot run it, the human-readable reason why."""
+    groups: Tuple[OrgGroup, ...]
+    reason: Optional[str] = None
+    notes: Tuple[str, ...] = ()
+
+    @property
+    def compiled(self) -> bool:
+        return self.reason is None
+
+    @property
+    def n_groups(self) -> int:
+        return len(self.groups)
+
+    @property
+    def n_orgs(self) -> int:
+        return sum(g.size for g in self.groups)
+
+    @property
+    def noisy(self) -> bool:
+        return any(g.noise_sigma > 0.0 for g in self.groups)
+
+    @property
+    def homogeneous(self) -> bool:
+        """One noiseless group — the legacy scan/shard engines' contract."""
+        return self.n_groups == 1 and not self.noisy
+
+    @property
+    def permutation(self) -> Tuple[int, ...]:
+        """Org positions in group-concatenation order."""
+        return tuple(i for g in self.groups for i in g.indices)
+
+    @property
+    def inverse_permutation(self) -> Tuple[int, ...]:
+        """Maps group-concatenated rows back to original org order."""
+        perm = self.permutation
+        inv = [0] * len(perm)
+        for pos, i in enumerate(perm):
+            inv[i] = pos
+        return tuple(inv)
+
+    def fallback(self, reason: str) -> "ExecutionPlan":
+        """Degrade to the Python path for an engine-level reason (e.g. a
+        host-side metric_fn); the first reason recorded wins."""
+        if self.reason is not None:
+            return self
+        return replace(self, reason=reason)
+
+    def describe(self) -> str:
+        head = f"{self.n_groups} group{'s' if self.n_groups != 1 else ''}: "
+        body = " | ".join(g.describe() for g in self.groups)
+        tail = f"  [fallback: {self.reason}]" if self.reason else ""
+        return head + "[" + body + "]" + tail
+
+
+def _pad_invariant(model: Any, q) -> bool:
+    inv = getattr(model, "pad_invariant", False)
+    if callable(inv):
+        inv = inv(q)
+    return bool(inv)
+
+
+def _group_key(org: Any) -> tuple:
+    """Grouping key; orgs with equal keys share one vmapped stack."""
+    x = org.x_train
+    q = getattr(org.local_loss, "q", None)
+    extra: tuple
+    if x.ndim != 2:
+        # higher-rank inputs stack unpadded: the full trailing shape must
+        # match within a group
+        extra = ("shape", tuple(int(s) for s in x.shape[1:]))
+    elif _pad_invariant(org.model, q):
+        # zero-pad columns are inert for this fit: widths may mix freely
+        extra = ("padded",)
+    else:
+        # width-dependent random init (MLP, Linear q!=2, ...): padding would
+        # silently change the draws, so each width gets its own group
+        extra = ("width", int(x.shape[-1]))
+    return (type(org.model), org.model, q,
+            float(getattr(org, "noise_sigma", 0.0)), extra)
+
+
+def plan_orgs(orgs: Sequence[Any],
+              eval_sets: Optional[Dict[str, tuple]] = None) -> ExecutionPlan:
+    """Partition ``orgs`` into compiled-engine groups, or say why not.
+
+    The returned plan always carries the group partition (useful for
+    diagnostics even when ineligible); ``plan.compiled`` is the single
+    eligibility verdict the engine dispatch consumes.
+    """
+    if not orgs:
+        return ExecutionPlan((), reason="no organizations to plan")
+
+    reason = None
+    notes: List[str] = []
+    for i, org in enumerate(orgs):
+        if getattr(org, "dms", False):
+            reason = (f"organization {org.index} uses Deep Model Sharing "
+                      f"(its per-round extractor/head state cannot be "
+                      f"stacked into a scanned round step)")
+            break
+        if not getattr(org.model, "scan_safe", False):
+            reason = (f"organization {org.index}'s model "
+                      f"{type(org.model).__name__} is not scan-safe "
+                      f"(fit/apply not declared pure-jnp)")
+            break
+        if getattr(org.local_loss, "q", None) is None:
+            reason = (f"organization {org.index}'s local_loss "
+                      f"{getattr(org.local_loss, '__name__', org.local_loss)}"
+                      f" has no exponent q (not an ell_q loss)")
+            break
+        x = org.x_train
+        if not (hasattr(x, "ndim") and hasattr(x, "shape")):
+            reason = f"organization {org.index}'s input is not an array"
+            break
+        if x.shape[0] != orgs[0].x_train.shape[0]:
+            reason = (f"org inputs do not share a sample axis: organization "
+                      f"{org.index} has {x.shape[0]} rows, organization "
+                      f"{orgs[0].index} has {orgs[0].x_train.shape[0]}")
+            break
+
+    if reason is None and eval_sets:
+        reason = _check_eval_sets(orgs, eval_sets)
+
+    # group by key, preserving first-occurrence order (key equality is
+    # checked by value — frozen-dataclass models compare by config)
+    keys: List[tuple] = []
+    members: List[List[int]] = []
+    for i, org in enumerate(orgs):
+        try:
+            k = _group_key(org)
+        except Exception:
+            k = ("unkeyed", i)
+        for gi, existing in enumerate(keys):
+            if existing == k:
+                members[gi].append(i)
+                break
+        else:
+            keys.append(k)
+            members.append([i])
+
+    groups = tuple(
+        OrgGroup(
+            indices=tuple(idx),
+            org_ids=tuple(int(orgs[i].index) for i in idx),
+            model=orgs[idx[0]].model,
+            local_loss=orgs[idx[0]].local_loss,
+            noise_sigma=float(getattr(orgs[idx[0]], "noise_sigma", 0.0)),
+        )
+        for idx in members
+    )
+    width_split = [k for k in keys if k[-1] and k[-1][0] == "width"]
+    if len(width_split) > 1 and reason is None:
+        notes.append("width-dependent model init: groups split per slice "
+                     "width instead of zero-padding")
+    return ExecutionPlan(groups=groups, reason=reason, notes=tuple(notes))
+
+
+def _check_eval_sets(orgs: Sequence[Any],
+                     eval_sets: Dict[str, tuple]) -> Optional[str]:
+    for name, (xs_e, _) in eval_sets.items():
+        if len(xs_e) != len(orgs):
+            return (f"eval set {name!r} has {len(xs_e)} slices for "
+                    f"{len(orgs)} organizations")
+        for i, (org, x_e) in enumerate(zip(orgs, xs_e)):
+            x = org.x_train
+            if not (hasattr(x_e, "ndim") and hasattr(x_e, "shape")):
+                return f"eval set {name!r} slice {i} is not an array"
+            if x_e.ndim != x.ndim:
+                return (f"eval set {name!r} slice {i} has rank {x_e.ndim}, "
+                        f"train slice has rank {x.ndim}")
+            if x_e.shape[0] != xs_e[0].shape[0]:
+                return (f"eval set {name!r} slices do not share a sample "
+                        f"axis")
+            if x.ndim == 2:
+                if int(x_e.shape[-1]) != int(x.shape[-1]):
+                    return (f"eval set {name!r} slice {i} has width "
+                            f"{int(x_e.shape[-1])}, organization "
+                            f"{org.index} was fit on width "
+                            f"{int(x.shape[-1])}")
+            elif x_e.shape[1:] != x.shape[1:]:
+                return (f"eval set {name!r} slice {i} shape "
+                        f"{tuple(x_e.shape[1:])} != train shape "
+                        f"{tuple(x.shape[1:])}")
+    return None
+
+
+def plan_lm_orgs(orgs: Sequence[Any]) -> ExecutionPlan:
+    """The same grouping for LM-scale organizations (``core.gal_lm``):
+    groups keyed by (architecture config, local lr). The fused LM path
+    additionally requires a single group — ``fit_lm`` raises with
+    ``plan.describe()`` otherwise."""
+    if not orgs:
+        return ExecutionPlan((), reason="no organizations to plan")
+    reason = None
+    for org in orgs:
+        if org.params is None or org._train_step is None:
+            reason = (f"LM organization {org.index} is not initialized "
+                      f"(call .init(rng) first)")
+            break
+    keys: List[tuple] = []
+    members: List[List[int]] = []
+    for i, org in enumerate(orgs):
+        k = (org.cfg, org.lr)
+        for gi, existing in enumerate(keys):
+            if existing == k:
+                members[gi].append(i)
+                break
+        else:
+            keys.append(k)
+            members.append([i])
+    groups = tuple(
+        OrgGroup(indices=tuple(idx),
+                 org_ids=tuple(int(orgs[i].index) for i in idx),
+                 model=orgs[idx[0]].cfg, local_loss=None)
+        for idx in members
+    )
+    return ExecutionPlan(groups=groups, reason=reason)

@@ -32,6 +32,26 @@ class ProtocolCost:
         return self.bytes_broadcast + self.bytes_gathered
 
 
+def gal_round_bytes(n: int, k: int, m: int, eval_ns=(),
+                    dtype_bytes: int = 4) -> tuple:
+    """Bytes crossing org boundaries in ONE assistance round, Table-14
+    convention: Alice ships the privatized residual to the other M-1 orgs;
+    all M orgs — Alice included — ship their fitted values back for the
+    train set AND for each eval prediction stage (``eval_ns`` lists the
+    eval-set row counts). Returns ``(broadcast, gathered)`` as exact ints.
+
+    This is the ONE source of the engines' per-round communication ledger
+    (``history["comm_broadcast_bytes"/"comm_gather_bytes"]``): the
+    org-sharded engine's numbers come from the same static collective
+    operand shapes, and the scan / grouped / Python engines simulate the
+    identical wire protocol, so the ledger is engine-independent."""
+    resid = n * k * dtype_bytes
+    broadcast = (m - 1) * resid
+    gathered = m * resid + sum(m * int(ne) * k * dtype_bytes
+                               for ne in eval_ns)
+    return broadcast, gathered
+
+
 def gal_cost(n: int, k: int, m: int, rounds: int, dtype_bytes: int = 4,
              dms: bool = False) -> ProtocolCost:
     resid = n * k * dtype_bytes

@@ -102,6 +102,34 @@ def pad_and_stack(xs: Sequence[jnp.ndarray], pad_to: int | None = None
     return jnp.stack(padded), dims
 
 
+def stack_groups(xs: Sequence[jnp.ndarray],
+                 index_groups: Sequence[Sequence[int]],
+                 pad_tos: Sequence[int | None] | None = None,
+                 mesh=None) -> tuple:
+    """Per-group ``pad_and_stack``: partition ``xs`` by the planner's group
+    index tuples and stack each group on its own pad geometry.
+
+    The grouped GAL engine vmaps ONE model per group, so padding only has to
+    be homogeneous *within* a group — a StumpBoost group and a KernelRidge
+    group keep their own widths. Returns ``(stacks, dims, pads)``, all
+    per-group lists; ``pad_tos`` pins each group's pad width (prediction
+    stage must re-use the training geometry). With ``mesh`` given, each
+    group's stack is placed org-sharded along the mesh's "org" axis
+    (requires the device count to divide every group size).
+    """
+    stacks, dims, pads = [], [], []
+    for gi, idx in enumerate(index_groups):
+        pad_to = None if pad_tos is None else pad_tos[gi]
+        stack, d = pad_and_stack([xs[i] for i in idx], pad_to=pad_to)
+        if mesh is not None:
+            from repro.launch.sharding import org_stack_sharding
+            stack = jax.device_put(stack, org_stack_sharding(mesh, stack.ndim))
+        stacks.append(stack)
+        dims.append(d)
+        pads.append(int(stack.shape[-1]) if stack.ndim == 3 else None)
+    return stacks, dims, pads
+
+
 def pad_and_stack_sharded(xs: Sequence[jnp.ndarray], mesh,
                           pad_to: int | None = None) -> tuple:
     """``pad_and_stack`` + placement: split the org-major stack over the

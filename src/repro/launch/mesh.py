@@ -30,6 +30,18 @@ def org_mesh_eligible(m: int) -> bool:
     return 1 < m <= d and d % m == 0
 
 
+def grouped_mesh_eligible(group_sizes) -> bool:
+    """True when every planner group's org stack can shard its org axis
+    across ALL local devices: multi-device host and the device count divides
+    each group size. The grouped GAL engine then places one org-shard of
+    every group per device — heterogeneous groups stay separate programs,
+    each partitioned over the same "org" mesh (GSPMD), which is how a
+    mixed-model org set on a matching device count maps onto the mesh."""
+    d = len(jax.devices())
+    return (d > 1 and bool(group_sizes)
+            and all(s % d == 0 for s in group_sizes))
+
+
 def make_org_mesh(m: int):
     """1-D mesh mapping organization index -> device along an "org" axis.
 

@@ -11,6 +11,10 @@ Two serving modes:
     per-(round, org) Python assembly. ``--engine shard`` fits on the
     org-sharded multi-device engine (one org per device along an "org"
     mesh axis) and reports its per-round communication ledger.
+    ``--hetero`` switches to the paper's model-autonomy setting: a
+    GB–SVM-style mixed-model org set fit on the grouped fused engine,
+    printing the planner's per-group composition alongside the serve
+    latency.
 
 Examples (CPU container):
   REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
@@ -19,6 +23,8 @@ Examples (CPU container):
       --rounds 8 --orgs 4 --batch 256 --steps 32
   REPRO_FORCE_DEVICES=4 PYTHONPATH=src python -m repro.launch.serve \
       --gal-ensemble --engine shard --rounds 8 --orgs 4 --batch 256
+  PYTHONPATH=src python -m repro.launch.serve --gal-ensemble --hetero \
+      --rounds 8 --orgs 4 --batch 256
 
 NOTE: the ``REPRO_FORCE_DEVICES`` shim below must run before the first jax
 operation in the process (see repro/utils/force_devices.py), so it sits
@@ -48,15 +54,33 @@ def gal_ensemble_serve(args) -> None:
     from repro.data.synthetic import make_regression, train_test_split
     from repro.models.zoo import Linear
 
+    from repro.models.zoo import KernelRidge, StumpBoost
+
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
     ds = make_regression(rng_np, n=512, d=4 * args.orgs)
     train, test = train_test_split(ds, rng_np)
     xs = split_features(train.x, args.orgs)
-    res = gal.fit(key, make_orgs(xs, Linear()), train.y, get_loss("mse"),
-                  GALConfig(rounds=args.rounds, engine=args.engine))
+    engine = args.engine
+    if args.hetero:
+        # model autonomy (paper Sec. 4.2): alternate GB / SVM stand-ins so
+        # the planner fuses a mixed-model set into one compiled round loop
+        models = [StumpBoost(n_stumps=20) if i % 2 == 0 else KernelRidge()
+                  for i in range(args.orgs)]
+        if engine in ("scan", "shard"):
+            engine = "grouped"  # the single-group engines cannot mix models
+    else:
+        models = Linear()
+    res = gal.fit(key, make_orgs(xs, models), train.y, get_loss("mse"),
+                  GALConfig(rounds=args.rounds, engine=engine))
+    if res.plan is not None:
+        sharded = (f", group stacks sharded over {res.mesh_devices} devices"
+                   if res.mesh_devices else "")
+        print(f"gal-ensemble plan ({res.engine}): "
+              f"{res.plan.describe()}{sharded}")
     if "comm_broadcast_bytes" in res.history:
-        print(f"gal-ensemble comm ledger ({res.engine}): "
+        tag = "collective" if res.engine == "shard" else "simulated"
+        print(f"gal-ensemble comm ledger ({res.engine}, {tag}): "
               f"broadcast={sum(res.history['comm_broadcast_bytes']):.0f} B "
               f"gathered={sum(res.history['comm_gather_bytes']):.0f} B "
               f"over {res.rounds} rounds x {len(jax.devices())} devices")
@@ -73,9 +97,15 @@ def gal_ensemble_serve(args) -> None:
     dt_fast = (time.time() - t0) / args.steps
 
     res.unpack_to_orgs()                                  # legacy loop path
-    from repro.data.partition import pad_and_stack
-    xe_stack, _ = pad_and_stack(xs_req, pad_to=res.pad_to)
-    xs_padded = list(xe_stack)
+    # per-round params were fit at each GROUP's pad width: pad request
+    # slices per group before the per-(round, org) assembly
+    from repro.data.partition import stack_groups
+    stacks, _, _ = stack_groups(xs_req, [g.indices for g in res.plan.groups],
+                                pad_tos=res.group_pads)
+    xs_padded = list(xs_req)
+    for g, st in zip(res.plan.groups, stacks):
+        for j, i in enumerate(g.indices):
+            xs_padded[i] = st[j]
 
     jax.block_until_ready(res.predict_legacy(xs_padded))
     t0 = time.time()
@@ -105,9 +135,15 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=8)
     ap.add_argument("--orgs", type=int, default=4)
     ap.add_argument("--engine", default="scan",
-                    choices=("auto", "scan", "shard"),
+                    choices=("auto", "scan", "shard", "grouped"),
                     help="--gal-ensemble fit engine; 'shard' places one org "
-                         "per device (needs orgs | device count)")
+                         "per device (needs orgs | device count); 'grouped' "
+                         "is the planner-driven fused engine for mixed "
+                         "model sets")
+    ap.add_argument("--hetero", action="store_true",
+                    help="--gal-ensemble with a mixed GB/SVM-style model "
+                         "set (model autonomy) fused by the org execution "
+                         "planner; prints the per-group composition")
     args = ap.parse_args()
 
     if args.gal_ensemble:

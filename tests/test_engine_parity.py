@@ -148,14 +148,22 @@ def test_pad_invariant_models_parity_on_unequal_split(rng_np, key):
             rtol=1e-3, atol=1e-4, err_msg=type(model).__name__)
 
 
-def test_random_init_models_fall_back_when_padding_needed(rng_np, key):
-    """MLP inits params at the padded width, so auto keeps it on the python
-    path for unequal splits (and on the scan path for equal ones)."""
+def test_random_init_models_split_by_width_when_padding_needed(rng_np, key):
+    """MLP inits params at the slice width, so padding would change its
+    draws: the planner splits unequal widths into per-width groups (the
+    grouped engine) instead of falling back, and parity with the reference
+    engine holds exactly because each org keeps its true width."""
     from repro.models.zoo import MLP
     xs_unequal, y, _, _ = _setting(rng_np, d=13, n=100)
     res = gal.fit(key, make_orgs(xs_unequal, MLP((8,), epochs=10)), y,
                   get_loss("mse"), GALConfig(rounds=1))
-    assert res.engine == "python"
+    assert res.engine == "grouped"
+    assert res.plan.n_groups == 2           # widths (4,) and (3, 3, 3)
+    res_py = gal.fit(key, make_orgs(xs_unequal, MLP((8,), epochs=10)), y,
+                     get_loss("mse"), GALConfig(rounds=1, engine="python"))
+    np.testing.assert_allclose(res.history["train_loss"],
+                               res_py.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
     xs_equal, y2, _, _ = _setting(rng_np, d=12, n=100)
     orgs_equal = make_orgs(xs_equal, MLP((8,), epochs=10))
     expected = "shard" if shard_eligible(orgs_equal) else "scan"
@@ -171,23 +179,38 @@ def test_stacked_predict_rejects_mismatched_slices(rng_np, key):
         res.predict(list(reversed(xs_te)))  # wrong org order
 
 
-def test_heterogeneous_orgs_fall_back_to_python(rng_np, key):
+def test_heterogeneous_orgs_compile_to_grouped_engine(rng_np, key):
+    """Model autonomy no longer means the slow path: a mixed-model org set
+    is not scan_compatible (no SINGLE group), but the planner fuses it into
+    the grouped engine; forcing the single-group 'scan' engine still raises
+    with the planner's group breakdown."""
     xs, y, _, _ = _setting(rng_np)
     models = [Linear(), StumpBoost(n_stumps=10), KernelRidge(), Linear()]
     orgs = make_orgs(xs, models)
     assert not scan_compatible(orgs)
     res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=2))
-    assert res.engine == "python" and res.stacked_params is None
-    with pytest.raises(ValueError):
+    assert res.engine == "grouped" and res.plan.n_groups == 3
+    # interleaved membership: the two Linear orgs share one group
+    assert res.plan.groups[0].indices == (0, 3)
+    with pytest.raises(ValueError, match="ONE noiseless homogeneous"):
         gal.fit(key, make_orgs(xs, models), y, get_loss("mse"),
                 GALConfig(rounds=2, engine="scan"))
 
 
-def test_dms_and_noise_fall_back(rng_np, key):
-    xs, y, _, _ = _setting(rng_np)
-    assert not scan_compatible(make_orgs(xs, Linear(), dms=True))
-    assert not scan_compatible(
-        make_orgs(xs, Linear(), noise_sigmas=[0.1] * 4))
+def test_dms_falls_back_noise_compiles(rng_np, key):
+    """DMS remains a TRUE fallback (per-round state cannot be scanned);
+    noisy orgs are traceable now (fold_in noise keys) and compile to the
+    grouped engine instead of the Python loop."""
+    from repro.models.zoo import MLP
+    xs, y, _, _ = _setting(rng_np, n=100)
+    dms_orgs = make_orgs(xs, MLP((8,), epochs=5), dms=True)
+    assert not scan_compatible(dms_orgs)
+    res = gal.fit(key, dms_orgs, y, get_loss("mse"), GALConfig(rounds=1))
+    assert res.engine == "python"
+    noisy = make_orgs(xs, Linear(), noise_sigmas=[0.1] * 4)
+    assert not scan_compatible(noisy)   # noisy != the single-group contract
+    res2 = gal.fit(key, noisy, y, get_loss("mse"), GALConfig(rounds=1))
+    assert res2.engine == "grouped"
 
 
 def test_scan_engine_with_privacy_runs(rng_np, key):

@@ -1,0 +1,243 @@
+"""Grouped fused engine == Python reference on the heterogeneous scenarios.
+
+The grouped engine replays Algorithm 1 with the reference engine's exact
+RNG discipline — ``fold_in(k_round, org.index)`` per fit, ``fold_in(org_key,
+777)`` training noise, ``fold_in(PRNGKey(org.index), t)`` prediction noise —
+so for deterministic local fits every recorded quantity (etas, assistance
+weights, train/eval history, predictions) must agree to float tolerance on:
+
+  * a heterogeneous GB–SVM-style model mix (paper Sec. 4.2 model autonomy),
+  * per-org local ell_q exponents,
+  * noisy organizations (paper Table 6), draw for draw,
+  * combinations of the above.
+
+Also covered: the engine-independent communication ledger (scan / grouped /
+python vs the protocol_sim oracle) and the deduplicated planner-reason
+error path.
+"""
+import numpy as np
+import pytest
+import jax
+
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss, lq_loss
+from repro.core.organizations import make_orgs
+from repro.core.protocol_sim import gal_cost, gal_round_bytes
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.metrics.metrics import mad
+from repro.models.zoo import KernelRidge, Linear, StumpBoost
+
+
+def _setting(rng_np, m=4, d=12, n=200):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def _mix(m=4, n_stumps=8):
+    return [StumpBoost(n_stumps=n_stumps) if i % 2 == 0 else KernelRidge()
+            for i in range(m)]
+
+
+def _parity(res_a, res_b, cols=("train_loss",), predict=None):
+    # f32 tolerance tier of the existing cross-engine suites: eta/weight
+    # drift accumulates over rounds through the weight-fit Adam scans
+    np.testing.assert_allclose(res_a.etas, res_b.etas, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.stack(res_a.weights),
+                               np.stack(res_b.weights), atol=1e-3)
+    for col in cols:
+        np.testing.assert_allclose(res_a.history[col], res_b.history[col],
+                                   rtol=1e-3, atol=1e-3, err_msg=col)
+    if predict is not None:
+        np.testing.assert_allclose(np.asarray(res_a.predict(predict)),
+                                   np.asarray(res_b.predict(predict)),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_hetero_gb_svm_mix_parity(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    kw = dict(eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    res_py = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                     GALConfig(rounds=4, engine="python"), **kw)
+    res_gr = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                     GALConfig(rounds=4, engine="grouped"), **kw)
+    assert res_gr.engine == "grouped" and res_gr.plan.n_groups == 2
+    _parity(res_gr, res_py,
+            cols=("train_loss", "test_loss", "test_metric"), predict=xs_te)
+
+
+def test_auto_selects_grouped_for_mixed_models(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                  GALConfig(rounds=2))
+    assert res.engine == "grouped"
+    # per-group stacked params keep the (T, M_g, ...) contract
+    for g, params in zip(res.plan.groups, res.group_params):
+        leaves = jax.tree_util.tree_leaves(params)
+        assert all(l.shape[:2] == (2, g.size) for l in leaves)
+
+
+def test_per_org_loss_q_parity(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    losses = [lq_loss(2.0), lq_loss(2.0), lq_loss(4.0), lq_loss(4.0)]
+    kw = dict(eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    res_py = gal.fit(key, make_orgs(xs, Linear(), local_losses=losses), y,
+                     get_loss("mse"), GALConfig(rounds=3, engine="python"),
+                     **kw)
+    res_gr = gal.fit(key, make_orgs(xs, Linear(), local_losses=losses), y,
+                     get_loss("mse"), GALConfig(rounds=3), **kw)
+    assert res_gr.engine == "grouped" and res_gr.plan.n_groups == 2
+    _parity(res_gr, res_py, cols=("train_loss", "test_loss"), predict=xs_te)
+
+
+def test_noisy_orgs_parity_draw_for_draw(rng_np, key):
+    """The satellite regression test: with fold_in-derived noise keys the
+    grouped engine and the Python reference draw IDENTICAL training- and
+    prediction-stage noise, so noisy parity holds to float tolerance —
+    including the per-round eval history and post-fit predictions."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+    sig = [0.0, 1.0, 0.0, 1.0]
+    kw = dict(eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    res_py = gal.fit(key, make_orgs(xs, Linear(), noise_sigmas=sig), y,
+                     get_loss("mse"), GALConfig(rounds=4, engine="python"),
+                     **kw)
+    res_gr = gal.fit(key, make_orgs(xs, Linear(), noise_sigmas=sig), y,
+                     get_loss("mse"), GALConfig(rounds=4), **kw)
+    assert res_gr.engine == "grouped"
+    assert res_gr.plan.noisy and res_gr.plan.n_groups == 2
+    _parity(res_gr, res_py,
+            cols=("train_loss", "test_loss", "test_metric"), predict=xs_te)
+
+
+def test_noisy_hetero_combination_parity(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    res_py = gal.fit(key, make_orgs(xs, _mix(), noise_sigmas=[0.5] * 4), y,
+                     get_loss("mse"), GALConfig(rounds=2, engine="python"))
+    res_gr = gal.fit(key, make_orgs(xs, _mix(), noise_sigmas=[0.5] * 4), y,
+                     get_loss("mse"), GALConfig(rounds=2))
+    assert res_gr.plan.n_groups == 2 and res_gr.plan.noisy
+    _parity(res_gr, res_py, predict=xs_te)
+
+
+def test_grouped_respects_eta_stop_threshold(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                  GALConfig(rounds=10, eta_stop_threshold=10.0,
+                            engine="grouped"))
+    assert res.rounds == 1
+    assert len(res.history["train_loss"]) == 2
+    for params in res.group_params:
+        assert all(l.shape[0] == 1
+                   for l in jax.tree_util.tree_leaves(params))
+
+
+def test_grouped_predict_rejects_mismatched_slices(rng_np, key):
+    xs, y, xs_te, _ = _setting(rng_np, d=13)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=2, engine="grouped"))
+    with pytest.raises(ValueError, match="widths"):
+        res.predict(list(reversed(xs_te)))       # wrong org order
+
+
+def test_grouped_unpack_to_orgs_restores_legacy_path(rng_np, key):
+    """unpack_to_orgs is plan-aware: per-round params land back on the
+    RIGHT org even though groups permute the org order."""
+    from repro.data.partition import stack_groups
+    xs, y, xs_te, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                  GALConfig(rounds=3, engine="grouped"))
+    pred_fast = np.asarray(res.predict(xs_te))
+    res.unpack_to_orgs()
+    stacks, _, _ = stack_groups(xs_te, [g.indices for g in res.plan.groups],
+                                pad_tos=res.group_pads)
+    xs_padded = list(xs_te)
+    for g, st in zip(res.plan.groups, stacks):
+        for j, i in enumerate(g.indices):
+            xs_padded[i] = st[j]
+    np.testing.assert_allclose(pred_fast,
+                               np.asarray(res.predict_legacy(xs_padded)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_comm_ledger_engine_independent_single_host(rng_np, key):
+    """scan / grouped / python all record the simulated Table-14 ledger with
+    identical exact ints (protocol_sim.gal_round_bytes is the one source);
+    totals match the gal_cost oracle."""
+    rounds = 3
+    xs, y, xs_te, y_te = _setting(rng_np)
+    kw = dict(eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    res_py = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=rounds, engine="python"), **kw)
+    res_sc = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=rounds, engine="scan"), **kw)
+    res_gr = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                     GALConfig(rounds=rounds, engine="grouped"), **kw)
+    n, k = y.shape[0], y.shape[-1]
+    bcast, gather = gal_round_bytes(n, k, 4, [y_te.shape[0]])
+    for res in (res_py, res_sc, res_gr):
+        assert res.history["comm_broadcast_bytes"] == [bcast] * rounds
+        assert res.history["comm_gather_bytes"] == [gather] * rounds
+        assert all(isinstance(b, int)
+                   for b in res.history["comm_broadcast_bytes"])
+    # totals without eval sets == the Table-14 oracle
+    res_plain = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                        GALConfig(rounds=rounds, engine="scan"))
+    expect = gal_cost(n, k, 4, rounds)
+    assert sum(res_plain.history["comm_broadcast_bytes"]) == \
+        expect.bytes_broadcast
+    assert sum(res_plain.history["comm_gather_bytes"]) == \
+        expect.bytes_gathered
+
+
+def test_python_ledger_trims_on_early_stop(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=10, eta_stop_threshold=10.0,
+                            engine="python"))
+    assert res.rounds == 1
+    assert len(res.history["comm_broadcast_bytes"]) == 1
+
+
+def test_forced_engines_share_one_planner_reason_path(rng_np, key):
+    """Satellite: the scan/shard/grouped ineligibility errors are ONE code
+    path surfacing the planner's human-readable reason."""
+    xs, y, _, _ = _setting(rng_np)
+    dms_orgs = lambda: make_orgs(xs, Linear(), dms=True)  # noqa: E731
+    msgs = []
+    for engine in ("scan", "shard", "grouped"):
+        with pytest.raises(ValueError) as ei:
+            gal.fit(key, dms_orgs(), y, get_loss("mse"),
+                    GALConfig(rounds=1, engine=engine))
+        msgs.append(str(ei.value))
+    for engine, msg in zip(("scan", "shard", "grouped"), msgs):
+        assert f"engine={engine!r} cannot compile" in msg
+        assert "Deep Model Sharing" in msg
+
+
+def test_grouped_engine_with_privacy_runs(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                  GALConfig(rounds=2, privacy="dp", privacy_alpha=5.0,
+                            engine="grouped"))
+    assert res.engine == "grouped"
+    assert np.isfinite(res.history["train_loss"]).all()
+
+
+def test_host_metric_degrades_plan_with_reason(rng_np, key):
+    """auto + a host-side metric still falls back cleanly; the planner's
+    reason (not an opaque crash) names the metric."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+
+    def host_metric(y_true, f):
+        return float(np.mean(np.abs(np.asarray(y_true) - np.asarray(f))))
+
+    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                  GALConfig(rounds=1),
+                  eval_sets={"test": (xs_te, y_te)}, metric_fn=host_metric)
+    assert res.engine == "python"
+    with pytest.raises(ValueError, match="jax-traceable"):
+        gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                GALConfig(rounds=1, engine="grouped"),
+                eval_sets={"test": (xs_te, y_te)}, metric_fn=host_metric)

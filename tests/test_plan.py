@@ -1,0 +1,147 @@
+"""Unit tests of the org execution planner (repro.core.plan).
+
+The planner is the single eligibility oracle of gal.fit's engine dispatch:
+it must (a) partition compilable org sets into homogeneous groups keyed by
+(model signature, ell_q, noise sigma, slice rank/width), preserving
+first-occurrence order and org membership, and (b) name a human-readable
+reason whenever the compiled engines cannot run at all.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.losses import lq_loss
+from repro.core.organizations import make_orgs
+from repro.core.plan import plan_lm_orgs, plan_orgs
+from repro.data.partition import split_features
+from repro.models.zoo import KernelRidge, Linear, MLP, StumpBoost
+
+
+def _xs(rng_np, n=64, d=12, m=4):
+    x = jnp.asarray(rng_np.standard_normal((n, d)).astype(np.float32))
+    return split_features(x, m)
+
+
+def test_homogeneous_orgs_one_group(rng_np):
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear()))
+    assert plan.compiled and plan.homogeneous
+    assert plan.n_groups == 1 and plan.groups[0].size == 4
+    assert plan.groups[0].indices == (0, 1, 2, 3)
+    assert "Linear x4" in plan.describe()
+
+
+def test_mixed_models_group_by_signature(rng_np):
+    models = [StumpBoost(), KernelRidge(), StumpBoost(), KernelRidge()]
+    plan = plan_orgs(make_orgs(_xs(rng_np), models))
+    assert plan.compiled and not plan.homogeneous
+    assert plan.n_groups == 2
+    assert plan.groups[0].indices == (0, 2)      # first-occurrence order
+    assert plan.groups[1].indices == (1, 3)
+    assert plan.permutation == (0, 2, 1, 3)
+    assert plan.inverse_permutation == (0, 2, 1, 3)
+
+
+def test_differing_model_config_splits_groups(rng_np):
+    models = [StumpBoost(n_stumps=10)] * 2 + [StumpBoost(n_stumps=20)] * 2
+    plan = plan_orgs(make_orgs(_xs(rng_np), models))
+    assert plan.compiled and plan.n_groups == 2  # config is the signature
+
+
+def test_per_org_loss_q_splits_groups(rng_np):
+    losses = [lq_loss(2.0), lq_loss(4.0), lq_loss(2.0), lq_loss(4.0)]
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), local_losses=losses))
+    assert plan.compiled and plan.n_groups == 2
+    assert plan.groups[0].indices == (0, 2)
+
+
+def test_noise_sigma_splits_groups(rng_np):
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(),
+                               noise_sigmas=[0.0, 0.5, 0.0, 0.5]))
+    assert plan.compiled and plan.noisy and not plan.homogeneous
+    assert plan.n_groups == 2
+    assert plan.groups[1].noise_sigma == 0.5
+    assert "sigma=0.5" in plan.describe()
+
+
+def test_pad_invariant_model_mixes_widths_in_one_group(rng_np):
+    xs = _xs(rng_np, d=13)                       # widths (4, 3, 3, 3)
+    plan = plan_orgs(make_orgs(xs, StumpBoost()))
+    assert plan.compiled and plan.n_groups == 1
+
+
+def test_width_dependent_init_splits_per_width(rng_np):
+    xs = _xs(rng_np, d=13)                       # widths (4, 3, 3, 3)
+    plan = plan_orgs(make_orgs(xs, MLP((8,))))
+    assert plan.compiled and plan.n_groups == 2
+    assert plan.groups[0].size == 1 and plan.groups[1].size == 3
+    assert any("width" in note for note in plan.notes)
+
+
+def test_dms_is_a_true_fallback(rng_np):
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), dms=True))
+    assert not plan.compiled
+    assert "Deep Model Sharing" in plan.reason
+
+
+def test_non_scan_safe_model_named_in_reason(rng_np):
+    class HostModel:
+        scan_safe = False
+
+        def fit(self, rng, x, r, loss):
+            return {}
+
+        def apply(self, params, x):
+            return jnp.zeros((x.shape[0], 1))
+
+    models = [Linear(), HostModel(), Linear(), Linear()]
+    plan = plan_orgs(make_orgs(_xs(rng_np), models))
+    assert not plan.compiled
+    assert "HostModel" in plan.reason and "organization 1" in plan.reason
+
+
+def test_non_ellq_loss_named_in_reason(rng_np):
+    def weird(r, f):
+        return jnp.mean(jnp.square(r - f))       # no .q attribute
+
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), local_losses=weird))
+    assert not plan.compiled and "no exponent q" in plan.reason
+
+
+def test_sample_axis_mismatch_is_a_reason(rng_np):
+    xs = _xs(rng_np)
+    xs[1] = xs[1][:32]
+    plan = plan_orgs(make_orgs(xs, Linear()))
+    assert not plan.compiled and "sample axis" in plan.reason
+
+
+def test_eval_width_mismatch_is_a_reason(rng_np):
+    xs = _xs(rng_np)
+    xs_e = [x[:16] for x in xs]
+    xs_e[2] = xs_e[2][:, :2]                     # wrong eval width for org 2
+    y_e = jnp.zeros((16, 1))
+    plan = plan_orgs(make_orgs(xs, Linear()), {"test": (xs_e, y_e)})
+    assert not plan.compiled and "width" in plan.reason
+
+
+def test_fallback_reason_is_sticky(rng_np):
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear()))
+    degraded = plan.fallback("first").fallback("second")
+    assert degraded.reason == "first"
+    assert plan.compiled                          # original is untouched
+
+
+def test_plan_lm_orgs_groups_by_cfg(key):
+    from repro.configs import get_arch
+    from repro.core.gal_lm import LMOrganization
+
+    cfg = get_arch("llama3-8b", smoke=True)
+    orgs = [LMOrganization(i, cfg, lambda t: t) for i in range(2)]
+    plan = plan_lm_orgs(orgs)
+    assert not plan.compiled and "not initialized" in plan.reason
+    import jax
+    for i, org in enumerate(orgs):
+        org.init(jax.random.fold_in(key, i), lr=1e-3)
+    plan = plan_lm_orgs(orgs)
+    assert plan.compiled and plan.n_groups == 1
+    orgs[1].lr = 3e-3                            # differing optimizer setting
+    assert plan_lm_orgs(orgs).n_groups == 2

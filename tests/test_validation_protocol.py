@@ -1,0 +1,102 @@
+"""The paper's Fig. 4 validation protocol, for every engine.
+
+During ``gal.fit`` the eval sets are scored each round with the
+*prediction-stage* mechanics, so the recorded per-round curve must be
+reproducible after the fact: for every round t,
+
+    loss(y_eval, result.predict(xs_eval, rounds=t)) == history["eval_loss"][t]
+
+(index 0 is the F^0 initializer entry). This pins the contract across the
+python / scan / grouped engines (the shard engine is covered by the same
+check in tests/test_shard_parity.py under REPRO_FORCE_DEVICES), including
+early-stopped fits where the history is trimmed, and noisy organizations
+where both sides must draw the identical prediction-stage noise.
+"""
+import numpy as np
+import pytest
+
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_blobs, make_regression, train_test_split
+from repro.models.zoo import KernelRidge, Linear, StumpBoost
+
+
+def _setting(rng_np, m=4, d=12, n=200):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def _check_fig4(res, loss, xs_te, y_te, rtol=1e-4, atol=1e-5):
+    curve = res.history["test_loss"]
+    assert len(curve) == res.rounds + 1
+    for t in range(res.rounds + 1):
+        replay = float(loss(y_te, res.predict(xs_te, rounds=t)))
+        np.testing.assert_allclose(replay, curve[t], rtol=rtol, atol=atol,
+                                   err_msg=f"round {t} ({res.engine})")
+
+
+@pytest.mark.parametrize("engine", ["python", "scan", "grouped"])
+def test_predict_rounds_reproduces_eval_history(rng_np, key, engine):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    loss = get_loss("mse")
+    res = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                  GALConfig(rounds=4, engine=engine),
+                  eval_sets={"test": (xs_te, y_te)})
+    assert res.engine == engine
+    _check_fig4(res, loss, xs_te, y_te)
+
+
+@pytest.mark.parametrize("engine", ["python", "grouped"])
+def test_fig4_protocol_on_model_autonomy_mix(rng_np, key, engine):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    models = [StumpBoost(n_stumps=8), KernelRidge(),
+              StumpBoost(n_stumps=8), KernelRidge()]
+    loss = get_loss("mse")
+    res = gal.fit(key, make_orgs(xs, models), y, loss,
+                  GALConfig(rounds=3, engine=engine),
+                  eval_sets={"test": (xs_te, y_te)})
+    _check_fig4(res, loss, xs_te, y_te)
+
+
+@pytest.mark.parametrize("engine", ["python", "grouped"])
+def test_fig4_protocol_on_noisy_orgs(rng_np, key, engine):
+    """The replay only works because prediction-stage noise keys are
+    engine-independent (fold_in(PRNGKey(index), t)): predict(rounds=t) must
+    re-draw the exact noise the in-fit eval evaluation drew."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+    loss = get_loss("mse")
+    res = gal.fit(key, make_orgs(xs, Linear(),
+                                 noise_sigmas=[0.0, 1.0, 0.0, 1.0]),
+                  y, loss, GALConfig(rounds=3, engine=engine),
+                  eval_sets={"test": (xs_te, y_te)})
+    _check_fig4(res, loss, xs_te, y_te)
+
+
+@pytest.mark.parametrize("engine", ["python", "scan"])
+def test_fig4_protocol_survives_early_stop(rng_np, key, engine):
+    """Early stopping trims the history; the remaining prefix must still
+    replay exactly through predict(rounds=t)."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+    loss = get_loss("mse")
+    res = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                  GALConfig(rounds=10, eta_stop_threshold=10.0,
+                            engine=engine),
+                  eval_sets={"test": (xs_te, y_te)})
+    assert res.rounds < 10
+    _check_fig4(res, loss, xs_te, y_te)
+
+
+def test_fig4_protocol_classification(rng_np, key):
+    ds = make_blobs(rng_np, n=150, d=10, k=5)
+    tr, te = train_test_split(ds, rng_np)
+    xs, xs_te = split_features(tr.x, 4), split_features(te.x, 4)
+    loss = get_loss("xent")
+    for engine in ("python", "scan"):
+        res = gal.fit(key, make_orgs(xs, Linear()), tr.y, loss,
+                      GALConfig(rounds=3, engine=engine),
+                      eval_sets={"test": (xs_te, te.y)})
+        _check_fig4(res, loss, xs_te, te.y, rtol=1e-3, atol=1e-4)
