@@ -49,21 +49,31 @@ def micro_benchmarks() -> None:
     print(f"eta_line_search_lbfgs,{t_ls:.1f},scalar")
 
 
+def _bench_smooth_l1(r, f):
+    """A custom (non-ell_q) local loss: exercises the autodiff-residual
+    compile path in the engine benchmark's mixed scenario."""
+    import jax.numpy as jnp
+    return jnp.mean(jnp.sqrt(1.0 + jnp.square(r - f)) - 1.0)
+
+
 def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
                          d: int = 16, json_rows: list | None = None) -> None:
     """rounds/sec of gal.fit per engine and scenario — homogeneous Linear,
     the paper's GB–SVM-style mixed-model set (model autonomy, fused by the
-    org execution planner), and noisy orgs (Table 6) — plus the
-    stacked-round prediction stage vs the per-(round, org) loop. Timings
-    include compilation — one fit call is the real unit of work. Rows are
-    appended to ``json_rows`` for the BENCH_PR3.json artifact."""
+    org execution planner), noisy orgs (Table 6), Deep Model Sharing
+    (Sec. 5: the python loop retraces its growing residual stack every
+    round; the grouped engine compiles the stacked-head carry ONCE), and
+    the DMS + custom-loss mix — plus the stacked-round prediction stage vs
+    the per-(round, org) loop. Timings include compilation — one fit call
+    is the real unit of work. Rows are appended to ``json_rows`` for the
+    BENCH_PR4.json artifact."""
     from repro.core import gal
     from repro.core.gal import GALConfig
-    from repro.core.losses import get_loss
+    from repro.core.losses import get_loss, lq_loss
     from repro.core.organizations import make_orgs
     from repro.data.partition import pad_and_stack, split_features
     from repro.data.synthetic import make_regression, train_test_split
-    from repro.models.zoo import KernelRidge, Linear, StumpBoost
+    from repro.models.zoo import KernelRidge, Linear, MLP, StumpBoost
 
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
@@ -83,12 +93,24 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
         "noisy": dict(models=lambda: Linear(),
                       sigmas=[0.0 if i % 2 == 0 else 1.0 for i in range(m)],
                       engines=("python", "grouped")),
+        "dms": dict(models=lambda: MLP((16,), epochs=20), sigmas=None,
+                    dms=True, engines=("python", "grouped")),
+        "dms_custom_loss_mix": dict(
+            models=lambda: [MLP((16,), epochs=20) if i % 2 == 0
+                            else Linear(epochs=20) for i in range(m)],
+            sigmas=None,
+            dms=[i % 2 == 0 for i in range(m)],
+            losses=[lq_loss(2.0) if i % 2 == 0 else _bench_smooth_l1
+                    for i in range(m)],
+            engines=("python", "grouped")),
     }
     results = {}
     for scen, spec in scenarios.items():
         for engine in spec["engines"]:
             cfg = GALConfig(rounds=rounds, engine=engine)
             orgs = make_orgs(xs, spec["models"](),
+                             local_losses=spec.get("losses"),
+                             dms=spec.get("dms", False),
                              noise_sigmas=spec["sigmas"])
             t0 = time.perf_counter()
             res = gal.fit(key, orgs, train.y, loss, cfg)
@@ -103,6 +125,14 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
                     "forced_engine": engine, "rounds": rounds, "orgs": m,
                     "n": n, "d": d, "seconds": dt, "rounds_per_sec": rps,
                 })
+    for scen in ("dms", "dms_custom_loss_mix"):
+        dt_py = [r for r in (json_rows or []) if r.get("scenario") == scen
+                 and r.get("forced_engine") == "python"]
+        dt_gr = [r for r in (json_rows or []) if r.get("scenario") == scen
+                 and r.get("forced_engine") == "grouped"]
+        if dt_py and dt_gr:
+            x = dt_gr[-1]["rounds_per_sec"] / dt_py[-1]["rounds_per_sec"]
+            print(f"# {scen}: grouped {x:.1f}x python")
 
     res = results[("homogeneous", "scan")]
     t_pred = _time_call(jax.jit(lambda xq: res.predict(xq)), xs_te)
@@ -229,7 +259,7 @@ def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
 
 
 def write_bench_json(path: str, rows: list) -> None:
-    """Emit the machine-readable benchmark artifact (BENCH_PR3.json):
+    """Emit the machine-readable benchmark artifact (BENCH_PR4.json):
     rounds/sec per engine and scenario — including the heterogeneous
     GB–SVM-mix row — so CI tracks the perf trajectory across PRs."""
     payload = {
@@ -249,7 +279,7 @@ def main() -> None:
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the engine-benchmark rows as machine-"
-                         "readable JSON (the BENCH_PR3.json CI artifact)")
+                         "readable JSON (the BENCH_PR4.json CI artifact)")
     ap.add_argument("--engines-only", action="store_true",
                     help="run only the GAL engine benchmarks (the fast "
                          "CI-artifact path): no tables, no micro, no "

@@ -33,6 +33,15 @@ and prediction-stage noise derives from ``fold_in(PRNGKey(org.index), t)``
 grouped engine, the Python loop, and the stacked prediction path all draw
 identical noise for a given (org, round).
 
+Deep Model Sharing (paper Sec. 4.2/5) is traceable too: a DMS group's
+shared extractor and its per-round heads ride the round scan's carry with
+FIXED shapes — the heads as one stacked ``(M_g, T, ...)`` buffer, the
+broadcast-residual history as a shared ``(T, N, K)`` buffer — and each
+round's joint refit (``_dms_org_round``) masks the not-yet-live head slots
+out of the objective, so their gradients are exactly zero and the refit
+reproduces ``Organization._fit_round_dms`` term for term. The Table-14
+memory win is ledgered per round in ``history["model_memories"]``.
+
 The fused executions share that round step structure:
 
   * ``fit_grouped`` — the planner-driven engine: one vmap per group inside
@@ -78,8 +87,9 @@ from jax.sharding import PartitionSpec as P
 from repro.core.losses import Loss, lq_loss
 from repro.core.plan import ExecutionPlan, plan_orgs
 from repro.core.privacy import apply_privacy
-from repro.core.protocol_sim import gal_round_bytes
+from repro.core.protocol_sim import gal_model_memories, gal_round_bytes
 from repro.core.weights import fit_weights, uniform_weights
+from repro.optim.optimizers import adam, apply_updates
 from repro.data.partition import (pad_and_stack, pad_and_stack_sharded,
                                   stack_groups)
 from repro.launch.mesh import (grouped_mesh_eligible, make_org_mesh,
@@ -104,10 +114,11 @@ def metric_traceable(metric_fn: Callable,
                      eval_sets: Dict[str, tuple]) -> bool:
     """True when metric_fn traces cleanly over abstract (y_e, f) values.
 
-    The fast path evaluates metric_fn under jit inside the scanned round
-    step; ``engine="auto"`` probes it with ``jax.eval_shape`` first and
-    falls back to the Python engine for host-side metrics (``float(...)``,
-    numpy/sklearn calls) instead of crashing mid-trace.
+    EVERY engine evaluates metrics under jit inside the round loop now
+    (the host-side escape hatch is retired); ``gal.fit`` probes each
+    metric with ``jax.eval_shape`` up front and raises — naming the
+    ``repro.metrics.METRICS`` registry — for host-side callables
+    (``float(...)``, numpy/sklearn calls) instead of crashing mid-trace.
     """
     try:
         for _, y_e in eval_sets.values():
@@ -132,15 +143,17 @@ def shard_eligible(orgs: Sequence[Any],
 
 def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
               rounds: int, dims: Sequence[int], pad_to: Optional[int],
-              comm: Optional[Dict[str, int]] = None) -> Dict[str, Any]:
+              comm: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Shared host-side tail of the fused engines: ONE ``jax.device_get``
     of the scalar bundle, early-stop trimming, history assembly.
 
     History columns: train/eval losses and metrics get the round-0 ``init``
     entry prepended (length T+1); ``comm`` maps ledger columns to exact
-    per-round byte counts (static shapes -> identical every round), added
-    as length-T rows of Python ints so the accounting never loses precision
-    to f32 at scale."""
+    per-round Python ints (so the accounting never loses precision to f32
+    at scale) — either one value repeated every round (static collective
+    shapes) or a length-``rounds`` list (e.g. the model-memory ledger,
+    which grows per round for fresh-fit orgs), trimmed like every other
+    column on early stop."""
     params_stacked = outs.pop("params")           # stays on device
     scalars, init = jax.device_get((outs, init))  # the ONE host sync
     n_valid = int(scalars["valid"].sum()) if masked else rounds
@@ -150,7 +163,9 @@ def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
             continue
         history[col] = [float(init[col])] + [float(v) for v in vals[:n_valid]]
     for col, per_round in (comm or {}).items():
-        history[col] = [per_round] * n_valid
+        history[col] = (list(per_round[:n_valid])
+                        if isinstance(per_round, (list, tuple))
+                        else [per_round] * n_valid)
     return {
         "params": jax.tree_util.tree_map(lambda l: l[:n_valid], params_stacked),
         "etas": [float(e) for e in scalars["eta"][:n_valid]],
@@ -162,7 +177,7 @@ def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
 
 
 def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
-                m, n, k, masked, metric_fn, alice_loss):
+                m, n, k, masked, metrics, alice_loss, state0=()):
     """The shared T-round loop of both fused engines: Alg. 1 steps 1-6
     traced once and scanned ``config.rounds`` times.
 
@@ -170,21 +185,31 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
 
       * ``broadcast(r)`` — step 2's residual distribution (identity on the
         vmap engine; a masked psum from Alice's device on the mesh engine);
-      * ``fit_orgs(k_round, r_bcast, t) -> (params_out, preds, combine)`` —
-        step 3's parallel fits. ``params_out`` is the per-round params
-        output (group-stacked / org-sharded), ``preds`` the (M, N, K)
+      * ``fit_orgs(k_round, r_bcast, t, state, active)
+        -> (state, params_out, preds, combine)`` — step 3's parallel fits.
+        ``state`` is the caller's opaque carry through the round scan (the
+        DMS groups' shared extractor / stacked-head buffers; ``()`` for
+        stateless engines) — updates must be frozen when ``active`` is
+        False so early-stopped rounds leave it untouched. ``params_out``
+        is the per-round params output (group-stacked / org-sharded; an
+        EMPTY pytree for state-carried groups), ``preds`` the (M, N, K)
         fitted values — in org order — handed to the step-4 weight fit, and
         ``combine(w, name)`` the weighted org-sum of fitted values on the
         train set (``name=None``) or eval set ``name`` (einsum vs psum).
         ``t`` is the 0-based round index, which noisy groups fold into the
         prediction-stage noise keys.
 
+    ``metrics`` maps metric names to in-trace callables ``(y, f) ->
+    scalar`` (the device-side metric registry, ``repro.metrics.METRICS``);
+    each eval set gets one history column per metric, so the whole eval
+    curve stays inside the single post-scan host sync.
+
     Everything else — residual, privacy, weight fit, eta line search,
     masked early stopping, history bookkeeping — is engine-independent and
-    lives here exactly once.
+    lives here exactly once. Returns ``(outs, init, state_final)``.
     """
     def round_step(carry, t):
-        f, f_evals, key, active = carry
+        f, f_evals, key, active, state = carry
         key, k_round = jax.random.split(key)
         # 1. pseudo-residual  2. privatized broadcast
         residual = loss.residual(y_in, f)
@@ -194,7 +219,8 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
             n_intervals=config.privacy_intervals,
         ))
         # 3. parallel local fits over the org axis
-        params_out, preds, combine = fit_orgs(k_round, r_bcast, t)
+        state, params_out, preds, combine = fit_orgs(
+            k_round, r_bcast, t, state, active)
         # 4. gradient assistance weights
         if config.use_weights and m > 1:
             w = fit_weights(
@@ -221,11 +247,11 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
             fe = f_evals[name] + eta_eff * combine(w, name)
             new_evals[name] = fe
             outs[f"{name}_loss"] = loss(y_e, fe)
-            if metric_fn is not None:
-                outs[f"{name}_metric"] = metric_fn(y_e, fe)
+            for mname, metric_fn in (metrics or {}).items():
+                outs[f"{name}_{mname}"] = metric_fn(y_e, fe)
         new_active = (active & (jnp.abs(eta) >= config.eta_stop_threshold)
                       if masked else active)
-        return (f_new, new_evals, key, new_active), outs
+        return (f_new, new_evals, key, new_active, state), outs
 
     f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
     f_evals = {
@@ -235,37 +261,110 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
     init = {"train_loss": loss(y_in, f)}
     for name, (_, y_e) in evals_in.items():
         init[f"{name}_loss"] = loss(y_e, f_evals[name])
-        if metric_fn is not None:
-            init[f"{name}_metric"] = metric_fn(y_e, f_evals[name])
-    carry0 = (f, f_evals, key, jnp.asarray(True))
-    _, outs = jax.lax.scan(round_step, carry0, jnp.arange(config.rounds))
-    return outs, init
+        for mname, metric_fn in (metrics or {}).items():
+            init[f"{name}_{mname}"] = metric_fn(y_e, f_evals[name])
+    carry0 = (f, f_evals, key, jnp.asarray(True), state0)
+    carry, outs = jax.lax.scan(round_step, carry0, jnp.arange(config.rounds))
+    return outs, init, carry[-1]
+
+
+def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
+                   k_out):
+    """One organization's Deep Model Sharing refit at 0-based round ``t``,
+    replicating ``Organization._fit_round_dms`` with FIXED-shape buffers so
+    the whole thing lives inside the scanned round step:
+
+      * ``heads_m`` is the stacked ``(T, ...)`` head buffer — round ``t``'s
+        fresh head (``init_head(fold_in(rng, t+1))``, the reference's
+        1-based key) is written into slot ``t``;
+      * ``rhist`` is the shared ``(T, N, K)`` broadcast-residual history;
+      * the joint extractor+heads Adam refit optimizes the reference's
+        per-slot objective — mean over rounds <= t of
+        ``lloss(r^s, head_s(features(x)))`` — with slots beyond ``t``
+        masked out, so their gradients are exactly zero and Adam leaves
+        them untouched (the masked mean equals the reference's mean over
+        its t live heads term for term).
+
+    Returns the refit ``(ext_m, heads_m)`` and this round's fitted values
+    ``apply_head(heads_m[t], features(ext_m, x_m))``.
+    """
+    head_new = model.init_head(jax.random.fold_in(key_m, t + 1), k_out)
+    heads_m = jax.tree_util.tree_map(
+        lambda buf, hn: jax.lax.dynamic_update_index_in_dim(buf, hn, t, 0),
+        heads_m, head_new)
+    rounds_total = rhist.shape[0]
+    mask = jnp.arange(rounds_total) <= t
+
+    def objective(p):
+        ext, heads = p
+        feats = model.features({**ext, "head": None}, x_m)
+        preds = jax.vmap(lambda h: model.apply_head(h, feats))(heads)
+        # double-where: not-yet-live slots hold zero heads on zero
+        # residuals, exactly where losses like sqrt(|r-f|) have an
+        # unbounded derivative — masking only the OUTPUT would still
+        # backprop 0 * inf = NaN into the shared extractor. Evaluating
+        # dead slots at a fixed unit offset keeps their loss gradient
+        # finite, the inner where zeroes their cotangent exactly, and the
+        # outer where drops their (arbitrary) value from the sum; live
+        # slots are untouched.
+        mask3 = mask[:, None, None]
+        safe_preds = jnp.where(mask3, preds, rhist + 1.0)
+        per_slot = jax.vmap(lloss)(rhist, safe_preds)       # (T,)
+        return jnp.sum(jnp.where(mask, per_slot, 0.0)) / (t + 1)
+
+    opt = adam(getattr(model, "lr", 1e-3))
+
+    def step(carry, _):
+        p, s = carry
+        g = jax.grad(objective)(p)
+        upd, s = opt.update(g, s, p)
+        return (apply_updates(p, upd), s), None
+
+    params = (ext_m, heads_m)
+    (params, _), _ = jax.lax.scan(step, (params, opt.init(params)), None,
+                                  length=getattr(model, "epochs", 100))
+    ext_m, heads_m = params
+    return ext_m, heads_m, _dms_apply(model, ext_m, heads_m, t, x_m)
+
+
+def _dms_apply(model, ext_m, heads_m, t, x_m):
+    """DMS prediction for one org: round ``t``'s head over the shared
+    extractor's features (the traced twin of ``predict_round``)."""
+    feats = model.features({**ext_m, "head": None}, x_m)
+    head_t = jax.tree_util.tree_map(lambda l: l[t], heads_m)
+    return model.apply_head(head_t, feats)
 
 
 def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                 loss: Loss, config: Any,
                 eval_sets: Optional[Dict[str, tuple]] = None,
-                metric_fn: Optional[Callable] = None, *,
+                metrics: Optional[Dict[str, Callable]] = None, *,
                 plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
     """Run Algorithm 1 as one jitted scan over the planner's groups.
 
     Every group is a ``jax.vmap`` of its own model over its own stacked
     slice block, all inside the SAME traced round step; group fitted values
     are concatenated back into org order before the step-4 weight fit, so a
-    heterogeneous GB–SVM mix, per-org ell_q exponents and noisy orgs pay
-    the same single host sync as the homogeneous case. On a multi-device
-    host where the device count divides every group size (and the plan is
-    not a single noiseless group — that case belongs to ``fit_shard``'s
-    real collectives), each group's stack is placed org-sharded along an
-    "org" mesh axis and GSPMD partitions every group's fits across the
-    devices.
+    heterogeneous GB–SVM mix, per-org local losses (ell_q or any traceable
+    callable) and noisy orgs pay the same single host sync as the
+    homogeneous case. Deep Model Sharing groups (paper Sec. 4.2/5) carry
+    their shared extractor and stacked ``(T, ...)`` head buffer through the
+    round scan (``_dms_org_round``); the Table-14 memory win is recorded in
+    ``history["model_memories"]``. On a multi-device host where the device
+    count divides every group size (and the plan is neither a single
+    noiseless group — that case belongs to ``fit_shard``'s real
+    collectives — nor stateful DMS), each group's stack is placed
+    org-sharded along an "org" mesh axis and GSPMD partitions every
+    group's fits across the devices.
 
     Returns a dict with host lists ``etas`` / ``weights``, the ``history``
     dict (losses/metrics as floats, the simulated per-round communication
-    ledger as exact ints), device-side per-group stacked params
-    ``group_params`` (leaves ``(T_valid, M_g, ...)``), the per-group
-    ``group_dims`` / ``group_pads`` geometry, and — single-group plans
-    only — the legacy ``params`` / ``dims`` / ``pad_to`` fields.
+    and model-memory ledgers as exact ints), device-side per-group stacked
+    params ``group_params`` (leaves ``(T_valid, M_g, ...)``; DMS groups
+    instead carry ``{"extractor": (M_g, ...), "heads": (M_g, T, ...)}``),
+    the per-group ``group_dims`` / ``group_pads`` geometry, and —
+    single-group fresh-fit plans only — the legacy ``params`` / ``dims`` /
+    ``pad_to`` fields.
     """
     if plan is None:
         plan = plan_orgs(orgs, eval_sets)
@@ -279,7 +378,7 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
     masked = config.eta_stop_threshold > 0.0
 
     mesh = None
-    if (not plan.homogeneous
+    if (not plan.homogeneous and not plan.has_dms
             and grouped_mesh_eligible([g.size for g in groups])):
         mesh = make_org_mesh(len(jax.devices()))
 
@@ -301,17 +400,67 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
             eval_stacks[name] = (tuple(stacks_e), y_e_in)
 
     def run(key, y_dev, xg_in, evals_in):
-        def fit_orgs(k_round, r_bcast, t):
-            # one vmapped model PER GROUP, all in the same traced step
-            params_g, preds_g = [], []
+        # DMS carry: one shared (T, N, K) residual-history buffer plus each
+        # DMS group's extractor stack and (M_g, T, ...) head buffers. The
+        # extractor inits replicate the reference exactly: round 0's
+        # k_round is split(rng)[1], and org m's init key fold_in(., index).
+        state0: Dict[str, Any] = {}
+        if plan.has_dms:
+            k_round0 = jax.random.split(key)[1]
+            state0["rhist"] = jnp.zeros((config.rounds, n, k), y_dev.dtype)
             for gi, g in enumerate(groups):
-                def fit_one(key_m, x_m, model=g.model, lloss=g.local_loss):
-                    params = model.fit(key_m, x_m, r_bcast, lloss)
-                    return params, model.apply(params, x_m)
+                if not g.dms:
+                    continue
+                keys0 = jax.vmap(lambda i: jax.random.fold_in(
+                    k_round0, i))(group_ids[gi])
 
+                def init_ext(key_m, x_m, model=g.model):
+                    full = model.init(key_m, x_m, k)
+                    return {kk: v for kk, v in full.items() if kk != "head"}
+
+                head_spec = jax.eval_shape(
+                    lambda kk, model=g.model: model.init_head(kk, k),
+                    jax.random.PRNGKey(0))
+                state0[f"g{gi}"] = {
+                    "extractor": jax.vmap(init_ext)(keys0, xg_in[gi]),
+                    "heads": jax.tree_util.tree_map(
+                        lambda s: jnp.zeros(
+                            (g.size, config.rounds) + s.shape, s.dtype),
+                        head_spec),
+                }
+
+        def fit_orgs(k_round, r_bcast, t, state, active):
+            new_state = dict(state)
+            if plan.has_dms:
+                new_state["rhist"] = jax.lax.dynamic_update_index_in_dim(
+                    state["rhist"], r_bcast, t, 0)
+            # one vmapped model PER GROUP, all in the same traced step
+            params_g, preds_g, dms_g = [], [], {}
+            for gi, g in enumerate(groups):
                 keys = jax.vmap(
                     lambda i: jax.random.fold_in(k_round, i))(group_ids[gi])
-                params_t, preds_t = jax.vmap(fit_one)(keys, xg_in[gi])
+                if g.dms:
+                    gs = state[f"g{gi}"]
+
+                    def dms_one(key_m, x_m, ext_m, heads_m,
+                                model=g.model, lloss=g.local_loss):
+                        return _dms_org_round(
+                            model, lloss, key_m, x_m, ext_m, heads_m,
+                            new_state["rhist"], t, k)
+
+                    ext_new, heads_new, preds_t = jax.vmap(dms_one)(
+                        keys, xg_in[gi], gs["extractor"], gs["heads"])
+                    new_state[f"g{gi}"] = {"extractor": ext_new,
+                                           "heads": heads_new}
+                    dms_g[gi] = new_state[f"g{gi}"]
+                    params_t = ()      # state-carried; no per-round output
+                else:
+                    def fit_one(key_m, x_m, model=g.model,
+                                lloss=g.local_loss):
+                        params = model.fit(key_m, x_m, r_bcast, lloss)
+                        return params, model.apply(params, x_m)
+
+                    params_t, preds_t = jax.vmap(fit_one)(keys, xg_in[gi])
                 if g.noise_sigma > 0.0:
                     # training-stage output noise, reference-engine keys
                     # (fold_in(org_key, 777), see Organization.fit_round)
@@ -320,6 +469,13 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                             jax.random.fold_in(kk, 777), (n, k)))(keys)
                 params_g.append(params_t)
                 preds_g.append(preds_t)
+            if masked and plan.has_dms:
+                # early-stopped rounds must leave the DMS carry untouched,
+                # exactly as the reference loop's `break` would
+                new_state = jax.tree_util.tree_map(
+                    lambda a, b: jnp.where(active, a, b), new_state, state)
+                for gi in dms_g:
+                    dms_g[gi] = new_state[f"g{gi}"]
             # concatenate group blocks back into ORG order for step 4
             preds = jnp.concatenate(preds_g, axis=0)[inv_perm]   # (M, N, K)
 
@@ -328,8 +484,15 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                     return jnp.einsum("m,mnk->nk", w, preds)
                 out = None
                 for gi, g in enumerate(groups):
-                    pe = jax.vmap(g.model.apply)(params_g[gi],
-                                                 evals_in[name][0][gi])
+                    if g.dms:
+                        gs = dms_g[gi]
+                        pe = jax.vmap(
+                            lambda e, h, x, model=g.model: _dms_apply(
+                                model, e, h, t, x)
+                        )(gs["extractor"], gs["heads"], evals_in[name][0][gi])
+                    else:
+                        pe = jax.vmap(g.model.apply)(params_g[gi],
+                                                     evals_in[name][0][gi])
                     if g.noise_sigma > 0.0:
                         # prediction-stage noise, engine-independent keys
                         # (fold_in(PRNGKey(index), t), see predict_round)
@@ -342,23 +505,35 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                     out = part if out is None else out + part
                 return out
 
-            return tuple(params_g), preds, combine
+            return new_state, tuple(params_g), preds, combine
 
         return _run_rounds(key, y_dev, evals_in, lambda r: r, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
-                           masked=masked, metric_fn=metric_fn,
-                           alice_loss=alice_loss)
+                           masked=masked, metrics=metrics,
+                           alice_loss=alice_loss, state0=state0)
 
-    outs, init = jax.jit(run)(rng, y_in, tuple(group_x), eval_stacks)
+    outs, init, state_final = jax.jit(run)(rng, y_in, tuple(group_x),
+                                           eval_stacks)
     bcast_b, gather_b = gal_round_bytes(
         n, k, m, [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
-    single = len(groups) == 1
+    dms_flags = [False] * m
+    for g in groups:
+        for i in g.indices:
+            dms_flags[i] = g.dms
+    single = len(groups) == 1 and not plan.has_dms
     out = _finalize(outs, init, masked, config.rounds,
                     dims=group_dims[0] if single else None,
                     pad_to=group_pads[0] if single else None,
                     comm={"comm_broadcast_bytes": bcast_b,
-                          "comm_gather_bytes": gather_b})
+                          "comm_gather_bytes": gather_b,
+                          "model_memories": gal_model_memories(
+                              config.rounds, dms_flags)})
     group_params = list(out["params"])            # tuple trimmed by _finalize
+    for gi, g in enumerate(groups):
+        if g.dms:
+            # the final carry state IS the fitted DMS ensemble: the shared
+            # extractor after the last live round plus every round's head
+            group_params[gi] = state_final[f"g{gi}"]
     out["params"] = group_params[0] if single else None
     out["group_params"] = group_params
     out["group_dims"] = group_dims
@@ -370,19 +545,19 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
 
 def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
              config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
-             metric_fn: Optional[Callable] = None, *,
+             metrics: Optional[Dict[str, Callable]] = None, *,
              plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
     """The legacy homogeneous fast path: ``fit_grouped`` on a single-group
     plan (one model vmapped over one org stack). Kept as the named engine
     behind ``GALConfig.engine="scan"``; the dispatch in ``gal.fit`` enforces
     the single-noiseless-group contract before calling it."""
-    return fit_grouped(rng, orgs, y, loss, config, eval_sets, metric_fn,
+    return fit_grouped(rng, orgs, y, loss, config, eval_sets, metrics,
                        plan=plan)
 
 
 def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
               config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
-              metric_fn: Optional[Callable] = None) -> Dict[str, Any]:
+              metrics: Optional[Dict[str, Callable]] = None) -> Dict[str, Any]:
     """Run Algorithm 1 org-sharded across devices (see the module docstring).
 
     Same contract as ``fit_scan`` — the T-round ``lax.scan``, the single
@@ -435,8 +610,8 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
             return jax.lax.psum(
                 jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
 
-        def fit_orgs(k_round, r_bcast, t):
-            del t  # single noiseless group: no prediction-stage noise keys
+        def fit_orgs(k_round, r_bcast, t, state, active):
+            del t, active  # single noiseless fresh-fit group: stateless
             # THIS device's local fit only (the scan engine's vmap axis
             # became the mesh axis); RNG key identical to the other engines
             params_m = model.fit(jax.random.fold_in(k_round, my_id), my_x,
@@ -452,11 +627,11 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                 return jax.lax.psum(w[pos] * out_m, "org")
 
             params_out = jax.tree_util.tree_map(lambda l: l[None], params_m)
-            return params_out, preds, combine
+            return state, params_out, preds, combine
 
         return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
-                           masked=masked, metric_fn=metric_fn,
+                           masked=masked, metrics=metrics,
                            alice_loss=alice_loss)
 
     # everything in the scalar bundle is replicated (collectives + identical
@@ -466,16 +641,16 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                  "valid": P(), "train_loss": P()}
     for name in eval_stacks:
         out_specs[f"{name}_loss"] = P()
-        if metric_fn is not None:
-            out_specs[f"{name}_metric"] = P()
+        for mname in (metrics or {}):
+            out_specs[f"{name}_{mname}"] = P()
     run_sharded = shard_map(
         run, mesh=mesh,
         in_specs=(P(), P(), P("org"), P("org"), eval_in_specs),
-        out_specs=(out_specs, P()),
+        out_specs=(out_specs, P(), ()),
         check_rep=False,
     )
-    outs, init = jax.jit(run_sharded)(rng, y_dev, x_stack, org_ids,
-                                      eval_stacks)
+    outs, init, _ = jax.jit(run_sharded)(rng, y_dev, x_stack, org_ids,
+                                         eval_stacks)
     # per-round ledger of the three collectives above, from the (static)
     # operand shapes — exact ints, Table-14 convention (Alice already holds
     # her residual copy; all M orgs ship fitted values for the train AND
@@ -485,7 +660,9 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
         n, k, m, [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()])
     return _finalize(outs, init, masked, config.rounds, dims, pad_to,
                      comm={"comm_broadcast_bytes": bcast_b,
-                           "comm_gather_bytes": gather_b})
+                           "comm_gather_bytes": gather_b,
+                           "model_memories": gal_model_memories(
+                               config.rounds, [False] * m)})
 
 
 def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],
@@ -498,7 +675,10 @@ def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],
 
     Per group: one nested (rounds x group-orgs) vmap of the group's model
     over its stacked slices, contracted with that group's slice of the
-    assistance weights in a single einsum — then summed over groups. Noisy
+    assistance weights in a single einsum — then summed over groups. Deep
+    Model Sharing groups featurize each org's slice ONCE through the final
+    shared extractor and read round t's head from the stacked ``(T, ...)``
+    head axis (exactly ``predict_round``'s final-state replay). Noisy
     groups add the engine-independent prediction-stage noise
     (``fold_in(PRNGKey(org.index), t)``, matching
     ``Organization.predict_round``), so grouped predictions equal the
@@ -524,11 +704,24 @@ def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],
                     f"fitted per-org widths {list(group_dims[gi])} of "
                     f"group {g.describe()} (check org order)")
         x_stack, _ = pad_and_stack(xs_g, pad_to=group_pads[gi])
-        params_t = jax.tree_util.tree_map(lambda l: l[:t_max],
-                                          group_params[gi])
-        preds = jax.vmap(
-            lambda p, model=g.model: jax.vmap(model.apply)(p, x_stack)
-        )(params_t)                                              # (T,Mg,N,K)
+        if g.dms:
+            gp = group_params[gi]
+
+            def dms_preds(ext_m, heads_m, x_m, model=g.model):
+                # features once per org; every round's head off the stack
+                feats = model.features({**ext_m, "head": None}, x_m)
+                return jax.vmap(
+                    lambda h: model.apply_head(h, feats)
+                )(jax.tree_util.tree_map(lambda l: l[:t_max], heads_m))
+
+            preds = jnp.swapaxes(jax.vmap(dms_preds)(
+                gp["extractor"], gp["heads"], x_stack), 0, 1)    # (T,Mg,N,K)
+        else:
+            params_t = jax.tree_util.tree_map(lambda l: l[:t_max],
+                                              group_params[gi])
+            preds = jax.vmap(
+                lambda p, model=g.model: jax.vmap(model.apply)(p, x_stack)
+            )(params_t)                                          # (T,Mg,N,K)
         if g.noise_sigma > 0.0:
             ids = jnp.asarray(g.org_ids, jnp.uint32)
             noise = jax.vmap(lambda t: jax.vmap(

@@ -23,24 +23,30 @@ same algorithm live here:
     collectives (``GALConfig.engine="shard"`` forces it);
   * the **grouped fused engine** (``repro.core.engine.fit_grouped``): ANY
     plan the planner compiles — heterogeneous model autonomy (the paper's
-    GB–SVM mix), per-org local ell_q exponents, noisy orgs — one vmap per
-    group inside the same scanned round step, group fitted values
-    concatenated in org order before the weight fit, single host sync per
-    ``fit``; on a matching device count the group stacks shard over an
-    "org" mesh (``GALConfig.engine="grouped"`` forces it);
+    GB–SVM mix), per-org local losses (ell_q or any traceable custom
+    callable via the autodiff-residual path), noisy orgs, and Deep Model
+    Sharing (shared extractor in the scan carry, per-round heads stacked
+    on a (T, ...) axis) — one vmap per group inside the same scanned round
+    step, group fitted values concatenated in org order before the weight
+    fit, single host sync per ``fit``; on a matching device count the
+    group stacks shard over an "org" mesh (``GALConfig.engine="grouped"``
+    forces it);
   * the **scan fast path** (``repro.core.engine.fit_scan``): the legacy
     single-group veneer over the grouped engine for homogeneous orgs
     (``GALConfig.engine="scan"`` forces it);
   * the **Python reference path**: per-org dispatch in interpreter order —
-    the remaining TRUE fallbacks are Deep Model Sharing, non-scan-safe
-    models, non-ell_q local losses, unstackable inputs and host-side
-    metrics (``GALConfig.engine="python"`` forces it).
+    now a pure TEST ORACLE (``tests/test_conformance.py``); the remaining
+    TRUE fallbacks are genuinely non-array inputs, non-scan-safe models
+    and non-traceable local losses (``GALConfig.engine="python"`` forces
+    it).
 
-Every engine records the per-round communication ledger
-(``history["comm_broadcast_bytes"/"comm_gather_bytes"]``) under the paper's
-Table-14 convention via ``repro.core.protocol_sim.gal_round_bytes`` — the
+Every engine records the per-round communication and model-memory ledgers
+(``history["comm_broadcast_bytes"/"comm_gather_bytes"/"model_memories"]``)
+under the paper's Table-14 convention via ``repro.core.protocol_sim`` — the
 shard engine's numbers come from its real collective operand shapes, the
-other engines simulate the identical wire protocol.
+other engines simulate the identical wire protocol. Eval metrics are
+device-side on every engine (``metrics=...`` resolved from
+``repro.metrics.METRICS``), evaluated inside the round loop.
 """
 from __future__ import annotations
 
@@ -53,14 +59,60 @@ import jax.numpy as jnp
 from repro.core import engine as engine_mod
 from repro.core.losses import Loss, lq_loss
 from repro.core.organizations import Organization
-from repro.core.plan import ExecutionPlan, plan_orgs
+from repro.core.plan import (ExecutionPlan, dms_interface_reason,
+                             plan_orgs)
 from repro.core.privacy import apply_privacy
-from repro.core.protocol_sim import gal_round_bytes
+from repro.core.protocol_sim import gal_model_memories, gal_round_bytes
 from repro.core.weights import fit_weights, uniform_weights
 from repro.launch.mesh import org_mesh_eligible
+from repro.metrics.metrics import METRICS, get_metric
 from repro.optim.lbfgs import line_search
 
 _COMPILED_ENGINES = ("scan", "shard", "grouped")
+
+
+def _resolve_metrics(metric_fn, metrics, eval_sets):
+    """Normalize the metric arguments into one ``{column: fn}`` map.
+
+    ``metrics`` entries are registry names (``repro.metrics.METRICS``) or
+    pure-jnp callables (column = ``__name__``); the legacy single
+    ``metric_fn`` keeps its historical ``"<eval>_metric"`` column. Every
+    metric is validated up front with ``jax.eval_shape`` — ALL engines now
+    evaluate metrics device-side inside the round loop (the host-side
+    metric escape hatch is retired), so a non-traceable callable is an
+    error naming the registry, not a silent Python fallback."""
+    mmap: Dict[str, Callable] = {}
+    if metric_fn is not None:
+        mmap["metric"] = metric_fn
+    for entry in (metrics or ()):
+        name = entry if isinstance(entry, str) else \
+            getattr(entry, "__name__", f"metric{len(mmap)}")
+        # each metric owns one "<eval>_<name>" column: a duplicate would
+        # silently clobber it, and "loss" would collide with the per-round
+        # loss curve the engines already record
+        if name == "loss":
+            raise ValueError(
+                "metric name 'loss' collides with the engines' per-round "
+                "'<eval>_loss' column; rename the callable")
+        if name in mmap:
+            raise ValueError(
+                f"duplicate metric name {name!r}: each metric needs a "
+                f"distinct history column (rename the callable or drop "
+                f"the duplicate)")
+        mmap[name] = get_metric(entry) if isinstance(entry, str) else entry
+    if not mmap:
+        return None
+    if eval_sets:
+        for mname, fn in mmap.items():
+            if not engine_mod.metric_traceable(fn, eval_sets):
+                raise ValueError(
+                    f"metric {mname!r} is not jax-traceable (failed "
+                    f"jax.eval_shape over the eval shapes): every engine "
+                    f"evaluates metrics device-side inside the round loop "
+                    f"now — use a registry metric "
+                    f"(repro.metrics.METRICS: {METRICS.names()}) or a "
+                    f"pure-jnp callable")
+    return mmap
 
 
 @dataclass(frozen=True)
@@ -85,11 +137,13 @@ class GALConfig:
     # the most capable engine that applies — org-sharded collectives for a
     # single noiseless group on an org mesh, the scan fast path for a
     # single noiseless group on one host, the grouped fused engine for any
-    # other compilable plan (heterogeneous models, per-org ell_q, noisy
-    # orgs), else the Python reference loop. "python" forces the reference
-    # loop; "scan"/"shard"/"grouped" force a compiled engine, raising with
-    # the planner's ineligibility reason when it cannot run. NOTE the
-    # compiled engines trace metric_fn — it must be jax-traceable there.
+    # other compilable plan (heterogeneous models, per-org/custom losses,
+    # noisy orgs, Deep Model Sharing), else the Python reference loop.
+    # "python" forces the reference loop; "scan"/"shard"/"grouped" force a
+    # compiled engine, raising with the planner's ineligibility reason when
+    # it cannot run. NOTE metrics/metric_fn are traced device-side on EVERY
+    # engine — they must be jax-traceable (repro.metrics.METRICS entries
+    # are).
     engine: str = "auto"               # auto | scan | shard | grouped | python
 
 
@@ -166,10 +220,23 @@ class GALResult:
         so legacy per-(round, org) flows (``predict_round``) work. The params
         were fit on slices zero-padded to each group's pad width (``pad_to``
         for single-group results, ``group_pads[g]`` otherwise) — pad inputs
-        with ``repro.data.partition.pad_and_stack`` before applying them."""
+        with ``repro.data.partition.pad_and_stack`` before applying them.
+        DMS groups restore the shared extractor and the per-round head list
+        from the stacked ``(T, ...)`` head buffer."""
         if self.group_params is not None and self.plan is not None:
             for gi, g in enumerate(self.plan.groups):
                 for j, i in enumerate(g.indices):
+                    if g.dms:
+                        gp = self.group_params[gi]
+                        self.orgs[i]._dms_extractor = \
+                            jax.tree_util.tree_map(
+                                lambda l, j=j: l[j], gp["extractor"])
+                        self.orgs[i]._dms_heads = [
+                            jax.tree_util.tree_map(
+                                lambda l, t=t, j=j: l[j, t], gp["heads"])
+                            for t in range(self.rounds)
+                        ]
+                        continue
                     self.orgs[i]._round_params = [
                         jax.tree_util.tree_map(
                             lambda l, t=t, j=j: l[t, j],
@@ -190,10 +257,19 @@ class GALResult:
 def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         config: GALConfig = GALConfig(),
         eval_sets: Optional[Dict[str, tuple]] = None,
-        metric_fn: Optional[Callable] = None) -> GALResult:
+        metric_fn: Optional[Callable] = None,
+        metrics: Optional[Sequence] = None) -> GALResult:
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
     validation protocol), producing the per-round curves of Fig. 4.
+
+    ``metrics`` names device-side eval metrics — registry names from
+    ``repro.metrics.METRICS`` (``"mad"``, ``"accuracy"``, ``"auroc"``) or
+    pure-jnp callables — each recorded per round as
+    ``history["<eval>_<metric>"]`` inside the engines' single host sync.
+    The legacy single ``metric_fn`` still fills ``history["<eval>_metric"]``
+    but is now traced device-side on EVERY engine (including the Python
+    reference); non-traceable callables raise up front.
 
     Engine dispatch is planner-driven: ``repro.core.plan.plan_orgs``
     partitions the orgs into homogeneous groups or names the reason the
@@ -203,18 +279,9 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         raise ValueError(f"unknown engine {config.engine!r}")
     for org in orgs:
         org.reset_round_state()  # a refit must not read stale round params
-    plan = plan_orgs(orgs, eval_sets)
-    if (plan.compiled and config.engine != "python" and eval_sets
-            and metric_fn is not None
-            and not engine_mod.metric_traceable(metric_fn, eval_sets)):
-        if config.engine in _COMPILED_ENGINES:
-            raise ValueError(
-                f"engine={config.engine!r} requires a jax-traceable "
-                "metric_fn (it runs under jit inside the fused round "
-                "step); this metric_fn failed jax.eval_shape")
-        plan = plan.fallback(
-            "metric_fn is not jax-traceable (failed jax.eval_shape): "
-            "the history needs host-side evaluation")
+    metric_map = _resolve_metrics(metric_fn, metrics, eval_sets)
+    plan = plan_orgs(orgs, eval_sets,
+                     probe_shape=(int(y.shape[0]), int(y.shape[-1])))
     if not plan.compiled:
         if config.engine in _COMPILED_ENGINES:
             # the ONE ineligibility path for every compiled engine: the
@@ -222,47 +289,63 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
             raise ValueError(
                 f"engine={config.engine!r} cannot compile these "
                 f"organizations: {plan.reason}")
-        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+        # interface check only, NOT scan_safe: a duck-typed model with the
+        # full extractor/head surface still runs the reference DMS loop.
+        # When even that surface is missing, the python engine cannot run
+        # it either — surface a clear error instead of an AttributeError
+        # three steps into round 0.
+        for o in orgs:
+            why = (dms_interface_reason(o)
+                   if getattr(o, "dms", False) else None)
+            if why:
+                raise ValueError(
+                    f"cannot run these organizations on ANY engine: {why}")
+        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
     if config.engine == "python":
-        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn)
+        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
     if config.engine == "scan":
         if not plan.homogeneous:
             raise ValueError(
                 "engine='scan' runs ONE noiseless homogeneous group; the "
                 f"planner found {plan.describe()} — use engine='grouped' "
-                "(or 'auto') to fuse heterogeneous/noisy organizations")
+                "(or 'auto') to fuse heterogeneous/noisy/DMS organizations")
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+                         rng, orgs, y, loss, config, eval_sets, metric_map)
     if config.engine == "shard":
         if plan.homogeneous:
             # fit_shard itself raises the org-mesh "must divide" error
             return _fit_fast(engine_mod.fit_shard, "shard", plan,
                              rng, orgs, y, loss, config, eval_sets,
-                             metric_fn)
+                             metric_map)
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_fn,
+                         rng, orgs, y, loss, config, eval_sets, metric_map,
                          require_mesh=True)
     if config.engine == "grouped":
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+                         rng, orgs, y, loss, config, eval_sets, metric_map)
     # auto: most capable engine that applies
     if plan.homogeneous and org_mesh_eligible(len(orgs)):
         return _fit_fast(engine_mod.fit_shard, "shard", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+                         rng, orgs, y, loss, config, eval_sets, metric_map)
     if plan.homogeneous:
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_fn)
+                         rng, orgs, y, loss, config, eval_sets, metric_map)
     return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
-                     rng, orgs, y, loss, config, eval_sets, metric_fn)
+                     rng, orgs, y, loss, config, eval_sets, metric_map)
 
 
 def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
-              metric_fn, require_mesh: bool = False) -> GALResult:
+              metrics, require_mesh: bool = False) -> GALResult:
     if engine_fn is engine_mod.fit_shard:
-        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metric_fn)
+        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics)
     else:
         if require_mesh:
             from repro.launch.mesh import grouped_mesh_eligible
+            if plan.has_dms:
+                raise ValueError(
+                    "engine='shard' cannot org-shard a Deep Model Sharing "
+                    "plan (its extractor/head carry is single-host); use "
+                    "engine='grouped' (or 'auto')")
             if not grouped_mesh_eligible([g.size for g in plan.groups]):
                 raise ValueError(
                     f"engine='shard' on a {plan.n_groups}-group plan needs "
@@ -270,14 +353,14 @@ def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
                     f"every group size {[g.size for g in plan.groups]} on "
                     "a multi-device host; use engine='grouped' for the "
                     "single-host fused path")
-        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metric_fn,
+        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics,
                         plan=plan)
     return _fast_result(orgs, y, loss, out, name, plan)
 
 
 def _fast_result(orgs, y, loss, out, engine: str,
                  plan: ExecutionPlan) -> GALResult:
-    single = plan.n_groups == 1
+    single = plan.n_groups == 1 and not plan.has_dms
     group_params = out.get("group_params")
     if group_params is None:            # fit_shard: legacy single-stack dict
         group_params = [out["params"]]
@@ -299,8 +382,8 @@ def _fast_result(orgs, y, loss, out, engine: str,
     )
 
 
-def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
-    """Reference interpreter-order engine (heterogeneous fallback)."""
+def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
+    """Reference interpreter-order engine (the conformance oracle)."""
     n = y.shape[0]
     k = y.shape[-1]
     f0 = loss.init_prediction(y)
@@ -315,16 +398,19 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
         for name, (xs_e, y_e) in eval_sets.items():
             f_evals[name] = jnp.broadcast_to(f0, (y_e.shape[0], k))
             hist[f"{name}_loss"] = [float(loss(y_e, f_evals[name]))]
-            if metric_fn is not None:
-                hist[f"{name}_metric"] = [float(metric_fn(y_e, f_evals[name]))]
-    # simulated per-round communication ledger (Table-14 convention, same
-    # formula as the shard engine's real collective shapes) — appended per
-    # EXECUTED round so early stopping trims it like the fused engines do
+            for mname, metric_fn in (metrics or {}).items():
+                hist[f"{name}_{mname}"] = [
+                    float(metric_fn(y_e, f_evals[name]))]
+    # simulated per-round communication + model-memory ledgers (Table-14
+    # convention, same formulas as the fused engines) — appended per
+    # EXECUTED round so early stopping trims them like the fused engines do
     bcast_b, gather_b = gal_round_bytes(
         n, k, len(orgs),
         [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
+    memories = gal_model_memories(config.rounds, [org.dms for org in orgs])
     hist["comm_broadcast_bytes"] = []
     hist["comm_gather_bytes"] = []
+    hist["model_memories"] = []
 
     for t in range(config.rounds):
         rng, k_round = jax.random.split(rng)
@@ -362,6 +448,7 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
         hist["train_loss"].append(float(loss(y, f_train)))
         hist["comm_broadcast_bytes"].append(bcast_b)
         hist["comm_gather_bytes"].append(gather_b)
+        hist["model_memories"].append(memories[t])
         if eval_sets:
             for name, (xs_e, y_e) in eval_sets.items():
                 preds_e = jnp.stack([
@@ -371,8 +458,8 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metric_fn) -> GALResult:
                     "m,mnk->nk", w, preds_e
                 )
                 hist[f"{name}_loss"].append(float(loss(y_e, f_evals[name])))
-                if metric_fn is not None:
-                    hist[f"{name}_metric"].append(
+                for mname, metric_fn in (metrics or {}).items():
+                    hist[f"{name}_{mname}"].append(
                         float(metric_fn(y_e, f_evals[name]))
                     )
         if (config.eta_stop_threshold > 0.0

@@ -32,7 +32,10 @@ class Loss:
         raise NotImplementedError
 
     def residual(self, y, f):  # per-sample -dL/dF
-        # generic fallback: autodiff of the summed loss
+        # generic fallback: autodiff of the summed loss. Pure lax, so a
+        # custom Loss subclass that only defines per_sample compiles
+        # straight into the fused engines' scanned round step — no Python
+        # fallback for autodiff-residual losses.
         return -jax.grad(lambda ff: jnp.sum(self.per_sample(y, ff)))(f)
 
     def per_sample(self, y, f):
@@ -40,6 +43,27 @@ class Loss:
 
     def init_prediction(self, y):
         raise NotImplementedError
+
+
+def autodiff_residual(loss: Loss, y, f):
+    """The generic ``-dL/dF`` fallback of ``Loss.residual``, bypassing any
+    closed form the subclass defines. This is the oracle the closed forms
+    and the Pallas ``residual_xent`` kernel are validated against
+    (``tests/test_kernels.py``), and what a custom loss gets for free
+    inside the compiled engines."""
+    return Loss.residual(loss, y, f)
+
+
+# vocab width from which CrossEntropyLoss.residual routes through the fused
+# Pallas kernel (kernels/residual_xent.py): below this a second (N, K)
+# softmax buffer is cheap; at LM scale the kernel streams vocab tiles
+# through VMEM instead of materializing softmax(F) in HBM.
+XENT_KERNEL_MIN_CLASSES = 1024
+# backends where the automatic route engages. Elsewhere (CPU/GPU) the
+# kernel would run in interpret mode — Python-emulated, far slower than the
+# closed form — or fail to lower, so the closed form stays the default;
+# tests widen this to exercise the dispatch in interpret mode.
+XENT_KERNEL_BACKENDS = ("tpu",)
 
 
 @LOSSES.register("mse")
@@ -82,7 +106,16 @@ class MAELoss(Loss):
 @LOSSES.register("xent")
 @dataclass(frozen=True)
 class CrossEntropyLoss(Loss):
-    """K-class cross entropy on logits; r = y - softmax(F) (Friedman multiclass)."""
+    """K-class cross entropy on logits; r = y - softmax(F) (Friedman
+    multiclass). At LM scale (K >= ``XENT_KERNEL_MIN_CLASSES``, a
+    ``XENT_KERNEL_BACKENDS`` backend) the residual routes through the
+    fused Pallas kernel ``kernels/residual_xent.py`` automatically — the
+    broadcast tensor is GAL's protocol hot path, and the kernel streams
+    vocab tiles through VMEM instead of materializing softmax(F) as a
+    second (N, K) buffer. The kernel recovers labels via argmax, so the
+    route adds the correction term ``y - onehot(argmax(y))`` — exactly
+    zero for one-hot y and exactly the smoothing mass for soft targets,
+    keeping both conventions exact on every backend."""
     name: str = "xent"
 
     def per_sample(self, y, f):
@@ -92,6 +125,21 @@ class CrossEntropyLoss(Loss):
         return jnp.mean(self.per_sample(y, f))
 
     def residual(self, y, f):
+        if (f.ndim == 2 and y.shape == f.shape
+                and f.shape[-1] >= XENT_KERNEL_MIN_CLASSES
+                and jax.default_backend() in XENT_KERNEL_BACKENDS):
+            # static shape+backend gate: trace-safe, picked up inside the
+            # fused round scan with no engine involvement. The kernel
+            # recovers labels via argmax, so
+            #   r = y - softmax
+            #     = (onehot(argmax y) - softmax)   <- the kernel
+            #     + (y - onehot(argmax y))         <- zero for one-hot y
+            # and soft/smoothed targets stay exact too; the correction is
+            # a fused elementwise term, no extra softmax buffer.
+            from repro.kernels.ops import residual_xent
+            labels = jnp.argmax(y, axis=-1)
+            hard = jax.nn.one_hot(labels, f.shape[-1], dtype=y.dtype)
+            return residual_xent(f, labels) + (y - hard)
         return y - jax.nn.softmax(f, axis=-1)
 
     def init_prediction(self, y):

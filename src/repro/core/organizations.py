@@ -88,10 +88,14 @@ class Organization:
         r_stack = jnp.stack(self._residual_history)     # (t, N, K)
 
         def objective(params):
+            # mean over rounds of the per-round local loss — the per-slot
+            # form lets arbitrary (non-ell_q) losses see the (N, K) shapes
+            # they were written for, and is the exact objective the traced
+            # DMS path in repro.core.engine masks over its (T, ...) buffers
             ext, hds = params
             feats = model.features({**ext, "head": None}, x)
             preds = jnp.stack([model.apply_head(h, feats) for h in hds])  # (t,N,K)
-            return loss(r_stack, preds)
+            return jnp.mean(jax.vmap(loss)(r_stack, preds))
 
         params = (extractor, heads)
         opt = adam(getattr(model, "lr", 1e-3))
@@ -135,20 +139,28 @@ class Organization:
 
     @property
     def scan_safe(self) -> bool:
-        """True when this org can join a compiled engine group: fresh
-        per-round fits of a pure-jnp (``scan_safe``) model and no DMS state
-        (its head list grows per round). Output noise no longer blocks
-        compilation — its keys are ``fold_in``-derived and traceable; the
-        planner (``repro.core.plan``) groups noisy orgs by sigma."""
-        return not self.dms and getattr(self.model, "scan_safe", False)
+        """True when this org can join a compiled engine group: pure-jnp
+        (``scan_safe``) model fits. Neither output noise nor Deep Model
+        Sharing blocks compilation any more — noise keys are
+        ``fold_in``-derived and traceable, and the DMS extractor/head state
+        rides the scan carry as a stacked ``(T, ...)`` head buffer (see
+        ``repro.core.engine``); the planner (``repro.core.plan``) groups
+        noisy orgs by sigma and DMS orgs by extractor signature, provided
+        the model exposes ``features``/``init_head``/``apply_head``."""
+        from repro.core.plan import dms_traceable
+        if self.dms:
+            return dms_traceable(self.model)
+        return getattr(self.model, "scan_safe", False)
 
 
-def make_orgs(xs, model_factory, local_losses=None, dms: bool = False,
+def make_orgs(xs, model_factory, local_losses=None, dms=False,
               noise_sigmas=None) -> List[Organization]:
     """Build M organizations from vertical slices ``xs`` (list of arrays).
 
     ``model_factory`` is either one zoo model (shared class, private params) or
     a list of per-org models — the paper's model-autonomy setting (GB-SVM mix).
+    ``dms`` is one flag for every org or a per-org sequence (a DMS +
+    fresh-fit mix, each side planned into its own compiled group).
     """
     m = len(xs)
     models = model_factory if isinstance(model_factory, (list, tuple)) \
@@ -157,8 +169,10 @@ def make_orgs(xs, model_factory, local_losses=None, dms: bool = False,
     if callable(losses):
         losses = [losses] * m
     sigmas = noise_sigmas if noise_sigmas is not None else [0.0] * m
+    dms_flags = list(dms) if isinstance(dms, (list, tuple)) else [dms] * m
     return [
         Organization(index=i, x_train=xs[i], model=models[i],
-                     local_loss=losses[i], dms=dms, noise_sigma=sigmas[i])
+                     local_loss=losses[i], dms=bool(dms_flags[i]),
+                     noise_sigma=sigmas[i])
         for i in range(m)
     ]

@@ -7,17 +7,28 @@ autonomy, per-org local losses, noisy orgs, Table 5/6) all fell back to the
 Python reference loop. The planner dissolves that wall: it partitions the
 organizations into *homogeneous groups* keyed by
 
-    (model signature, local-loss exponent q, noise sigma, slice rank
+    (model signature, Deep-Model-Sharing flag, local loss [the ell_q
+     exponent, or the loss callable itself for custom traceable losses],
+     noise sigma, slice rank
      [, slice width when the model's random init is width-dependent,
       trailing shape for higher-rank inputs])
 
 so that each group can be ``jax.vmap``-ed over one stacked input block, and
 ALL groups run inside the *same* traced round step — their fitted values
 concatenated along the org axis (in original org order) before the step-4
-weight fit. A plan either *compiles* (``plan.compiled``) or carries a
-human-readable ``reason`` naming the first organization that forces the
-Python fallback (Deep Model Sharing, a non-scan-safe model, a local loss
-with no ell_q exponent, inputs that do not share a sample axis). Width- or
+weight fit. Deep Model Sharing (paper Sec. 4.2/5) compiles too: a DMS
+group is keyed by its extractor signature (the model config) and its fit
+is traced with the shared extractor in the scan carry and the per-round
+heads accumulated on a stacked ``(T, ...)`` axis — see
+``repro.core.engine``. Custom local losses compile whenever they are
+jax-traceable (probed with ``jax.eval_shape``); ell_q losses keep their
+exponent as the group key, other losses key by callable identity.
+
+A plan either *compiles* (``plan.compiled``) or carries a human-readable
+``reason`` naming the first organization that forces the Python fallback —
+after this planner generation the true fallbacks are genuinely non-array
+inputs, models not declared ``scan_safe`` (or DMS models without the
+extractor/head interface), and local losses that fail to trace. Width- or
 shape-driven splits never block compilation — they just produce more groups,
 recorded in ``plan.notes``.
 
@@ -27,22 +38,23 @@ whose fused engine additionally requires a single group.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 
 @dataclass(frozen=True)
 class OrgGroup:
     """One homogeneous slice of the org list: same model config, same local
-    ell_q, same noise sigma, stackable inputs. ``indices`` are positions in
-    the fitted org list (the engine's concat/permutation coordinates);
-    ``org_ids`` are the ``Organization.index`` values (the RNG identity each
-    engine folds into the round key)."""
+    loss, same noise sigma, same DMS flag, stackable inputs. ``indices``
+    are positions in the fitted org list (the engine's concat/permutation
+    coordinates); ``org_ids`` are the ``Organization.index`` values (the
+    RNG identity each engine folds into the round key)."""
     indices: Tuple[int, ...]
     org_ids: Tuple[int, ...]
     model: Any
     local_loss: Any
     noise_sigma: float = 0.0
+    dms: bool = False
 
     @property
     def size(self) -> int:
@@ -51,8 +63,13 @@ class OrgGroup:
     def describe(self) -> str:
         q = getattr(self.local_loss, "q", None)
         bits = [f"{type(self.model).__name__} x{self.size}"]
+        if self.dms:
+            bits.append("DMS")
         if q is not None:
             bits.append(f"q={float(q):g}")
+        elif self.local_loss is not None:
+            bits.append(
+                f"loss={getattr(self.local_loss, '__name__', 'custom')}")
         if self.noise_sigma:
             bits.append(f"sigma={float(self.noise_sigma):g}")
         return " ".join(bits)
@@ -83,9 +100,17 @@ class ExecutionPlan:
         return any(g.noise_sigma > 0.0 for g in self.groups)
 
     @property
+    def has_dms(self) -> bool:
+        """True when any group runs Deep Model Sharing (a stateful carry in
+        the scanned round step — grouped-engine territory)."""
+        return any(g.dms for g in self.groups)
+
+    @property
     def homogeneous(self) -> bool:
-        """One noiseless group — the legacy scan/shard engines' contract."""
-        return self.n_groups == 1 and not self.noisy
+        """One noiseless fresh-fit group — the legacy scan/shard engines'
+        contract. DMS plans are never homogeneous: their extractor/head
+        carry belongs to the grouped engine."""
+        return self.n_groups == 1 and not self.noisy and not self.has_dms
 
     @property
     def permutation(self) -> Tuple[int, ...]:
@@ -101,13 +126,6 @@ class ExecutionPlan:
             inv[i] = pos
         return tuple(inv)
 
-    def fallback(self, reason: str) -> "ExecutionPlan":
-        """Degrade to the Python path for an engine-level reason (e.g. a
-        host-side metric_fn); the first reason recorded wins."""
-        if self.reason is not None:
-            return self
-        return replace(self, reason=reason)
-
     def describe(self) -> str:
         head = f"{self.n_groups} group{'s' if self.n_groups != 1 else ''}: "
         body = " | ".join(g.describe() for g in self.groups)
@@ -122,33 +140,88 @@ def _pad_invariant(model: Any, q) -> bool:
     return bool(inv)
 
 
+# the duck-typed surface a model must expose for the traced Deep Model
+# Sharing fit (shared extractor in the scan carry, stacked per-round heads)
+DMS_INTERFACE = ("init", "features", "init_head", "apply_head")
+
+
+def dms_traceable(model: Any) -> bool:
+    """True when ``model`` can join a compiled DMS group: pure-jnp
+    (``scan_safe``) AND exposes the shared-extractor interface."""
+    return (getattr(model, "scan_safe", False)
+            and all(hasattr(model, a) for a in DMS_INTERFACE))
+
+
+def dms_interface_reason(org: Any) -> Optional[str]:
+    """The human-readable reason when a DMS org's model lacks the
+    extractor/head surface, or None when it is complete. The ONE source of
+    this diagnostic: the planner uses it for the compiled-engine verdict
+    and ``gal.fit`` re-raises it for the python path, which needs the same
+    four methods."""
+    missing = [a for a in DMS_INTERFACE if not hasattr(org.model, a)]
+    if not missing:
+        return None
+    return (f"organization {org.index} uses Deep Model Sharing but its "
+            f"model {type(org.model).__name__} lacks the "
+            f"shared-extractor interface ({'/'.join(missing)})")
+
+
+def loss_traceable(local_loss: Any, probe_shape: Optional[tuple] = None
+                   ) -> bool:
+    """True when a custom (non-ell_q) local loss traces to a scalar under
+    ``jax.eval_shape`` — the compiled engines differentiate it inside the
+    scanned round step, so host-side callbacks cannot compile.
+    ``probe_shape`` is the real residual shape (N, K) when the caller
+    knows it (``gal.fit`` passes y's shape), so shape-dependent losses —
+    e.g. per-class weights broadcasting against K — are probed against
+    the shapes they will actually see; the (2, 1) fallback only covers
+    planning without a target."""
+    import jax
+    import jax.numpy as jnp
+    try:
+        spec = jax.ShapeDtypeStruct(tuple(probe_shape or (2, 1)),
+                                    jnp.float32)
+        out = jax.eval_shape(local_loss, spec, spec)
+        return getattr(out, "shape", None) == ()
+    except Exception:
+        return False
+
+
 def _group_key(org: Any) -> tuple:
     """Grouping key; orgs with equal keys share one vmapped stack."""
     x = org.x_train
     q = getattr(org.local_loss, "q", None)
+    # ell_q losses group by exponent value; custom traceable losses by the
+    # loss callable itself (identity — two orgs share a group only when
+    # they share the object)
+    loss_key = q if q is not None else org.local_loss
+    dms = bool(getattr(org, "dms", False))
     extra: tuple
     if x.ndim != 2:
         # higher-rank inputs stack unpadded: the full trailing shape must
         # match within a group
         extra = ("shape", tuple(int(s) for s in x.shape[1:]))
-    elif _pad_invariant(org.model, q):
+    elif not dms and _pad_invariant(org.model, q):
         # zero-pad columns are inert for this fit: widths may mix freely
         extra = ("padded",)
     else:
-        # width-dependent random init (MLP, Linear q!=2, ...): padding would
-        # silently change the draws, so each width gets its own group
+        # width-dependent random init (MLP, Linear q!=2, any DMS extractor
+        # init, ...): padding would silently change the draws, so each
+        # width gets its own group
         extra = ("width", int(x.shape[-1]))
-    return (type(org.model), org.model, q,
+    return (type(org.model), org.model, loss_key, dms,
             float(getattr(org, "noise_sigma", 0.0)), extra)
 
 
 def plan_orgs(orgs: Sequence[Any],
-              eval_sets: Optional[Dict[str, tuple]] = None) -> ExecutionPlan:
+              eval_sets: Optional[Dict[str, tuple]] = None,
+              probe_shape: Optional[tuple] = None) -> ExecutionPlan:
     """Partition ``orgs`` into compiled-engine groups, or say why not.
 
     The returned plan always carries the group partition (useful for
     diagnostics even when ineligible); ``plan.compiled`` is the single
-    eligibility verdict the engine dispatch consumes.
+    eligibility verdict the engine dispatch consumes. ``probe_shape`` is
+    the residual shape (N, K) custom losses will be traced at, when known.
     """
     if not orgs:
         return ExecutionPlan((), reason="no organizations to plan")
@@ -156,20 +229,24 @@ def plan_orgs(orgs: Sequence[Any],
     reason = None
     notes: List[str] = []
     for i, org in enumerate(orgs):
-        if getattr(org, "dms", False):
-            reason = (f"organization {org.index} uses Deep Model Sharing "
-                      f"(its per-round extractor/head state cannot be "
-                      f"stacked into a scanned round step)")
-            break
         if not getattr(org.model, "scan_safe", False):
             reason = (f"organization {org.index}'s model "
                       f"{type(org.model).__name__} is not scan-safe "
                       f"(fit/apply not declared pure-jnp)")
             break
-        if getattr(org.local_loss, "q", None) is None:
+        if getattr(org, "dms", False) and not dms_traceable(org.model):
+            reason = (dms_interface_reason(org)
+                      or (f"organization {org.index} uses Deep Model "
+                          f"Sharing but its model "
+                          f"{type(org.model).__name__} is not scan-safe"))
+            break
+        if (getattr(org.local_loss, "q", None) is None
+                and not loss_traceable(org.local_loss, probe_shape)):
             reason = (f"organization {org.index}'s local_loss "
                       f"{getattr(org.local_loss, '__name__', org.local_loss)}"
-                      f" has no exponent q (not an ell_q loss)")
+                      f" is not jax-traceable to a scalar (the compiled "
+                      f"engines differentiate it inside the scanned round "
+                      f"step)")
             break
         x = org.x_train
         if not (hasattr(x, "ndim") and hasattr(x, "shape")):
@@ -208,6 +285,7 @@ def plan_orgs(orgs: Sequence[Any],
             model=orgs[idx[0]].model,
             local_loss=orgs[idx[0]].local_loss,
             noise_sigma=float(getattr(orgs[idx[0]], "noise_sigma", 0.0)),
+            dms=bool(getattr(orgs[idx[0]], "dms", False)),
         )
         for idx in members
     )

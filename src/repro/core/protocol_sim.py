@@ -52,6 +52,21 @@ def gal_round_bytes(n: int, k: int, m: int, eval_ns=(),
     return broadcast, gathered
 
 
+def gal_model_memories(rounds: int, dms_flags) -> list:
+    """Per-round live model copies (paper Table 14's computation-space row,
+    Sec. 5 Deep Model Sharing): after round t+1, a fresh-fit organization
+    holds t+1 full models (one per round) while a DMS organization holds
+    ONE shared extractor — its per-round heads are the lightweight Tx
+    saving. ``dms_flags`` is the per-org DMS flag list in org order.
+
+    This is the one source of ``history["model_memories"]`` on every
+    engine; for an all-DMS (resp. no-DMS) org set the final entry equals
+    ``gal_cost(..., dms=True).model_memories`` (resp. ``dms=False``)."""
+    m_dms = sum(1 for f in dms_flags if f)
+    m_fresh = len(dms_flags) - m_dms
+    return [m_dms + (t + 1) * m_fresh for t in range(rounds)]
+
+
 def gal_cost(n: int, k: int, m: int, rounds: int, dtype_bytes: int = 4,
              dms: bool = False) -> ProtocolCost:
     resid = n * k * dtype_bytes

@@ -130,6 +130,28 @@ def stack_groups(xs: Sequence[jnp.ndarray],
     return stacks, dims, pads
 
 
+def unstack_groups(stacks: Sequence[jnp.ndarray],
+                   index_groups: Sequence[Sequence[int]],
+                   dims: Sequence[Sequence[int]] | None = None
+                   ) -> List[jnp.ndarray]:
+    """Inverse of ``stack_groups``: scatter each group's stacked rows back
+    into original org order. With ``dims`` (the per-group true widths that
+    ``stack_groups`` returned), tabular slices are trimmed back to their
+    pre-pad width, so ``unstack_groups(*stack_groups(xs, idx)[:2], ...)``
+    round-trips ``xs`` exactly; without ``dims`` the zero-padded rows are
+    returned as-is (the layout ``predict_legacy`` needs after
+    ``unpack_to_orgs``)."""
+    n_orgs = sum(len(idx) for idx in index_groups)
+    out: List[jnp.ndarray | None] = [None] * n_orgs
+    for gi, idx in enumerate(index_groups):
+        for j, i in enumerate(idx):
+            x = stacks[gi][j]
+            if dims is not None and x.ndim == 2:
+                x = x[:, :int(dims[gi][j])]
+            out[i] = x
+    return out
+
+
 def pad_and_stack_sharded(xs: Sequence[jnp.ndarray], mesh,
                           pad_to: int | None = None) -> tuple:
     """``pad_and_stack`` + placement: split the org-major stack over the

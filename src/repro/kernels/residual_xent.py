@@ -12,7 +12,16 @@ Tiles are (BT, BV) = (128, 512): MXU/VPU aligned (multiples of 128), VMEM
 footprint ~BT*BV*4B = 256 KiB per ref. The vocab grid dimension is sequential
 ("arbitrary") so the stats carry is legal; the token dimension is parallel.
 
-TPU is the target; correctness is validated with interpret=True on CPU.
+Callers: ``repro.kernels.ops.residual_xent`` (the jit'd entry the LM engine
+uses) and — automatically — ``CrossEntropyLoss.residual`` for one-hot
+targets at vocab >= ``repro.core.losses.XENT_KERNEL_MIN_CLASSES``, so any
+GAL engine whose Alice loss is softmax cross entropy picks the kernel up
+inside its scanned round step with no configuration.
+
+TPU is the target; correctness is validated with interpret=True on CPU
+against both the jnp reference and the generic autodiff ``Loss.residual``
+oracle, including tied-max rows spanning tile seams and the -inf padded
+vocab tail (``tests/test_kernels.py``).
 """
 from __future__ import annotations
 

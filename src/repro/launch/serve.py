@@ -14,7 +14,10 @@ Two serving modes:
     ``--hetero`` switches to the paper's model-autonomy setting: a
     GB–SVM-style mixed-model org set fit on the grouped fused engine,
     printing the planner's per-group composition alongside the serve
-    latency.
+    latency. ``--dms`` fits Deep Model Sharing organizations (paper
+    Sec. 4.2/5: one shared extractor + T stacked heads per org) on the
+    grouped engine and prints the model-memory ledger's Tx saving next to
+    the fresh-fit baseline.
 
 Examples (CPU container):
   REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
@@ -54,7 +57,7 @@ def gal_ensemble_serve(args) -> None:
     from repro.data.synthetic import make_regression, train_test_split
     from repro.models.zoo import Linear
 
-    from repro.models.zoo import KernelRidge, StumpBoost
+    from repro.models.zoo import KernelRidge, MLP, StumpBoost
 
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
@@ -62,7 +65,14 @@ def gal_ensemble_serve(args) -> None:
     train, test = train_test_split(ds, rng_np)
     xs = split_features(train.x, args.orgs)
     engine = args.engine
-    if args.hetero:
+    dms = False
+    if args.dms:
+        # Deep Model Sharing (paper Sec. 4.2/5): one shared extractor + T
+        # stacked heads per org, fused by the grouped engine's state carry
+        models, dms = MLP((16,), epochs=20), True
+        if engine in ("scan", "shard"):
+            engine = "grouped"  # the DMS carry is grouped-engine territory
+    elif args.hetero:
         # model autonomy (paper Sec. 4.2): alternate GB / SVM stand-ins so
         # the planner fuses a mixed-model set into one compiled round loop
         models = [StumpBoost(n_stumps=20) if i % 2 == 0 else KernelRidge()
@@ -71,8 +81,17 @@ def gal_ensemble_serve(args) -> None:
             engine = "grouped"  # the single-group engines cannot mix models
     else:
         models = Linear()
-    res = gal.fit(key, make_orgs(xs, models), train.y, get_loss("mse"),
-                  GALConfig(rounds=args.rounds, engine=engine))
+    res = gal.fit(key, make_orgs(xs, models, dms=dms), train.y,
+                  get_loss("mse"), GALConfig(rounds=args.rounds,
+                                             engine=engine))
+    if "model_memories" in res.history:
+        from repro.core.protocol_sim import gal_model_memories
+        fresh = gal_model_memories(res.rounds, [False] * args.orgs)
+        live = res.history["model_memories"][-1]
+        print(f"gal-ensemble model memories ({'DMS' if dms else 'fresh'}): "
+              f"{live} live copies after {res.rounds} rounds "
+              f"(fresh-fit baseline {fresh[-1]}; "
+              f"{fresh[-1] / max(live, 1):.1f}x saving)")
     if res.plan is not None:
         sharded = (f", group stacks sharded over {res.mesh_devices} devices"
                    if res.mesh_devices else "")
@@ -99,13 +118,10 @@ def gal_ensemble_serve(args) -> None:
     res.unpack_to_orgs()                                  # legacy loop path
     # per-round params were fit at each GROUP's pad width: pad request
     # slices per group before the per-(round, org) assembly
-    from repro.data.partition import stack_groups
-    stacks, _, _ = stack_groups(xs_req, [g.indices for g in res.plan.groups],
-                                pad_tos=res.group_pads)
-    xs_padded = list(xs_req)
-    for g, st in zip(res.plan.groups, stacks):
-        for j, i in enumerate(g.indices):
-            xs_padded[i] = st[j]
+    from repro.data.partition import stack_groups, unstack_groups
+    index_groups = [g.indices for g in res.plan.groups]
+    stacks, _, _ = stack_groups(xs_req, index_groups, pad_tos=res.group_pads)
+    xs_padded = unstack_groups(stacks, index_groups)
 
     jax.block_until_ready(res.predict_legacy(xs_padded))
     t0 = time.time()
@@ -144,6 +160,11 @@ def main() -> None:
                     help="--gal-ensemble with a mixed GB/SVM-style model "
                          "set (model autonomy) fused by the org execution "
                          "planner; prints the per-group composition")
+    ap.add_argument("--dms", action="store_true",
+                    help="--gal-ensemble with Deep Model Sharing orgs "
+                         "(one shared extractor + stacked per-round heads) "
+                         "on the grouped engine; prints the model-memory "
+                         "ledger's Tx saving")
     args = ap.parse_args()
 
     if args.gal_ensemble:

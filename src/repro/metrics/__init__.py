@@ -1,1 +1,2 @@
-from repro.metrics.metrics import accuracy, mad, auroc, metric_for_task
+from repro.metrics.metrics import (METRICS, accuracy, auroc, get_metric,
+                                   mad, metric_for_task)

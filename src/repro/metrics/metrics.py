@@ -1,26 +1,44 @@
-"""Evaluation metrics matching the paper: Accuracy, MAD, AUROC."""
+"""Evaluation metrics matching the paper: Accuracy, MAD, AUROC.
+
+Every metric here is a pure-jnp ``(y, f) -> scalar`` callable, registered
+in the ``METRICS`` registry so the GAL engines can evaluate them INSIDE the
+traced round step (device-side eval curves, one host sync per fit —
+``gal.fit(..., metrics=("accuracy", "auroc"))``). There is no host-side
+metric escape hatch any more: a metric that cannot trace under
+``jax.eval_shape`` is rejected up front on every engine, with this registry
+named as the fix.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.utils.registry import Registry
 
+METRICS: Registry = Registry("metric")
+
+
+@METRICS.register("accuracy")
 def accuracy(y_onehot: jnp.ndarray, f_logits: jnp.ndarray) -> jnp.ndarray:
     return jnp.mean(
         (jnp.argmax(f_logits, -1) == jnp.argmax(y_onehot, -1)).astype(jnp.float32)
     ) * 100.0
 
 
+@METRICS.register("mad")
 def mad(y: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
     """Mean absolute deviation (paper's regression metric)."""
     return jnp.mean(jnp.abs(y - f))
 
 
+@METRICS.register("auroc")
 def auroc(y: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
     """Rank-based AUROC for binary labels y in {0,1}, scores = logits.
     Mann-Whitney U with EXACT average ranks for ties: each score's rank is
     the mean of the 1-based positions its tie group spans, so quantized
     logits / saturated sigmoids score identically regardless of sample
-    order (a bare argsort rank is order-dependent under ties)."""
+    order (a bare argsort rank is order-dependent under ties). The double
+    ``searchsorted`` keeps the whole thing traceable, so AUROC eval curves
+    run inside the fused round scan."""
     y = y.reshape(-1)
     s = scores.reshape(-1)
     s_sorted = jnp.sort(s)
@@ -32,6 +50,12 @@ def auroc(y: jnp.ndarray, scores: jnp.ndarray) -> jnp.ndarray:
     sum_pos = jnp.sum(ranks * y)
     u = sum_pos - n_pos * (n_pos + 1) / 2.0
     return jnp.where((n_pos > 0) & (n_neg > 0), u / (n_pos * n_neg), 0.5)
+
+
+def get_metric(name: str):
+    """Resolve a registry metric by name (the ``gal.fit(metrics=...)``
+    entries)."""
+    return METRICS.get(name)
 
 
 def metric_for_task(task: str):

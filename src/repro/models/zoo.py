@@ -86,7 +86,10 @@ class Linear:
         return _dense(params, x)
 
     def fit(self, rng, x, r, local_loss):
-        q = getattr(local_loss, "q", 2.0)
+        # the closed ridge form is ONLY the ell_2 solution; a custom loss
+        # without a q exponent takes the generic Adam path (it is
+        # differentiated directly, so any traceable loss compiles)
+        q = getattr(local_loss, "q", None)
         if q == 2.0:
             # closed-form ridge regression of residuals
             n, d = x.shape

@@ -197,16 +197,18 @@ def test_heterogeneous_orgs_compile_to_grouped_engine(rng_np, key):
                 GALConfig(rounds=2, engine="scan"))
 
 
-def test_dms_falls_back_noise_compiles(rng_np, key):
-    """DMS remains a TRUE fallback (per-round state cannot be scanned);
-    noisy orgs are traceable now (fold_in noise keys) and compile to the
-    grouped engine instead of the Python loop."""
+def test_dms_and_noise_compile_to_grouped(rng_np, key):
+    """Neither DMS nor noisy orgs are fallbacks any more: both break the
+    single-group scan contract (scan_compatible False) but compile to the
+    grouped engine — DMS through the extractor/stacked-head carry, noise
+    through fold_in-derived keys."""
     from repro.models.zoo import MLP
     xs, y, _, _ = _setting(rng_np, n=100)
     dms_orgs = make_orgs(xs, MLP((8,), epochs=5), dms=True)
-    assert not scan_compatible(dms_orgs)
+    assert not scan_compatible(dms_orgs)    # DMS != the single-group contract
     res = gal.fit(key, dms_orgs, y, get_loss("mse"), GALConfig(rounds=1))
-    assert res.engine == "python"
+    assert res.engine == "grouped"
+    assert res.plan.has_dms
     noisy = make_orgs(xs, Linear(), noise_sigmas=[0.1] * 4)
     assert not scan_compatible(noisy)   # noisy != the single-group contract
     res2 = gal.fit(key, noisy, y, get_loss("mse"), GALConfig(rounds=1))

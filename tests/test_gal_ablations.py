@@ -92,7 +92,10 @@ def test_local_loss_lq_variants(rng_np, key, q):
 
 
 def test_dms_shares_extractor_and_still_learns(rng_np, key):
-    """Sec. 4.2: Deep Model Sharing — one extractor, per-round heads."""
+    """Sec. 4.2: Deep Model Sharing — one extractor, per-round heads. DMS
+    compiles now: auto picks the grouped engine (ConvNet has the
+    extractor/head interface), the memory ledger shows the Tx saving, and
+    unpack_to_orgs restores the per-org extractor + head-list view."""
     ds = make_patch_images(rng_np, n=96, size=8, k=4)
     tr, te = train_test_split(ds, rng_np)
     xs = split_image_patches(tr.x, 4)
@@ -101,7 +104,10 @@ def test_dms_shares_extractor_and_still_learns(rng_np, key):
     orgs = make_orgs(xs, model, dms=True)
     res = gal.fit(key, orgs, tr.y, get_loss("xent"), GALConfig(rounds=3),
                   eval_sets={"test": (xs_te, te.y)}, metric_fn=accuracy)
+    assert res.engine == "grouped" and res.plan.has_dms
     # DMS: one extractor per org regardless of rounds (T x memory saving)
+    assert res.history["model_memories"] == [4, 4, 4]
+    res.unpack_to_orgs()
     for org in orgs:
         assert org._dms_extractor is not None
         assert len(org._dms_heads) == 3

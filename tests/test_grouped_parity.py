@@ -202,18 +202,75 @@ def test_python_ledger_trims_on_early_stop(rng_np, key):
 
 def test_forced_engines_share_one_planner_reason_path(rng_np, key):
     """Satellite: the scan/shard/grouped ineligibility errors are ONE code
-    path surfacing the planner's human-readable reason."""
+    path surfacing the planner's human-readable reason. DMS compiles now,
+    so the probe is a genuinely non-compilable set: a model that is not
+    scan-safe."""
+    class HostModel:
+        scan_safe = False
+
+        def fit(self, rng, x, r, loss):
+            return {}
+
+        def apply(self, params, x):
+            import jax.numpy as jnp
+            return jnp.zeros((x.shape[0], 1))
+
     xs, y, _, _ = _setting(rng_np)
-    dms_orgs = lambda: make_orgs(xs, Linear(), dms=True)  # noqa: E731
+    bad_orgs = lambda: make_orgs(xs, HostModel())  # noqa: E731
     msgs = []
     for engine in ("scan", "shard", "grouped"):
         with pytest.raises(ValueError) as ei:
-            gal.fit(key, dms_orgs(), y, get_loss("mse"),
+            gal.fit(key, bad_orgs(), y, get_loss("mse"),
                     GALConfig(rounds=1, engine=engine))
         msgs.append(str(ei.value))
     for engine, msg in zip(("scan", "shard", "grouped"), msgs):
         assert f"engine={engine!r} cannot compile" in msg
-        assert "Deep Model Sharing" in msg
+        assert "not scan-safe" in msg
+
+
+def test_dms_without_head_interface_raises_on_any_engine(rng_np, key):
+    """A DMS org whose model lacks features/init_head/apply_head cannot run
+    anywhere — not even the python reference (it needs the same surface).
+    auto/python must surface the planner's reason up front instead of an
+    AttributeError three steps into round 0."""
+    xs, y, _, _ = _setting(rng_np)
+    for engine in ("auto", "python", "grouped"):
+        with pytest.raises(ValueError, match="Deep Model Sharing"):
+            gal.fit(key, make_orgs(xs, Linear(), dms=True), y,
+                    get_loss("mse"),
+                    GALConfig(rounds=1, engine=engine))
+
+
+def test_duck_typed_dms_model_still_runs_on_python(rng_np, key):
+    """The flip side: a duck-typed model WITH the full extractor/head
+    interface but no scan_safe declaration is not compilable, but the
+    reference DMS loop runs it fine — auto must fall back, not raise."""
+    import jax.numpy as jnp
+
+    class DuckDMS:                       # no scan_safe attribute at all
+        lr, epochs = 1e-2, 3
+
+        def init(self, rng, x, k_out):
+            d = x.shape[-1]
+            kw, kh = jax.random.split(rng)
+            return {"w": jax.random.normal(kw, (d, 4)) / jnp.sqrt(d),
+                    "head": self.init_head(kh, k_out)}
+
+        def features(self, params, x):
+            return jnp.tanh(x @ params["w"])
+
+        def init_head(self, rng, k_out):
+            return {"w": jax.random.normal(rng, (4, k_out)) * 0.1,
+                    "b": jnp.zeros((k_out,))}
+
+        def apply_head(self, head, h):
+            return h @ head["w"] + head["b"]
+
+    xs, y, _, _ = _setting(rng_np, n=60)
+    orgs = make_orgs(xs, DuckDMS(), dms=True)
+    res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=2))
+    assert res.engine == "python"
+    assert all(len(org._dms_heads) == 2 for org in orgs)
 
 
 def test_grouped_engine_with_privacy_runs(rng_np, key):
@@ -225,19 +282,39 @@ def test_grouped_engine_with_privacy_runs(rng_np, key):
     assert np.isfinite(res.history["train_loss"]).all()
 
 
-def test_host_metric_degrades_plan_with_reason(rng_np, key):
-    """auto + a host-side metric still falls back cleanly; the planner's
-    reason (not an opaque crash) names the metric."""
+def test_host_metric_is_rejected_on_every_engine(rng_np, key):
+    """The host-side metric escape hatch is retired: metrics run
+    device-side inside the round loop on EVERY engine (python included),
+    so a non-traceable callable raises up front, naming the registry."""
     xs, y, xs_te, y_te = _setting(rng_np)
 
     def host_metric(y_true, f):
         return float(np.mean(np.abs(np.asarray(y_true) - np.asarray(f))))
 
-    res = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
-                  GALConfig(rounds=1),
-                  eval_sets={"test": (xs_te, y_te)}, metric_fn=host_metric)
-    assert res.engine == "python"
-    with pytest.raises(ValueError, match="jax-traceable"):
-        gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
-                GALConfig(rounds=1, engine="grouped"),
-                eval_sets={"test": (xs_te, y_te)}, metric_fn=host_metric)
+    for engine in ("python", "grouped", "auto"):
+        with pytest.raises(ValueError, match="repro.metrics.METRICS"):
+            gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                    GALConfig(rounds=1, engine=engine),
+                    eval_sets={"test": (xs_te, y_te)},
+                    metric_fn=host_metric)
+
+
+def test_registry_metrics_device_side_parity(rng_np, key):
+    """gal.fit(metrics=("mad",)) records history["<eval>_mad"] inside the
+    single host sync; python and grouped agree, and the registry column
+    equals the legacy metric_fn column."""
+    xs, y, xs_te, y_te = _setting(rng_np)
+    kw = dict(eval_sets={"test": (xs_te, y_te)}, metrics=("mad",))
+    res_py = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                     GALConfig(rounds=3, engine="python"), **kw)
+    res_gr = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                     GALConfig(rounds=3, engine="grouped"), **kw)
+    np.testing.assert_allclose(res_py.history["test_mad"],
+                               res_gr.history["test_mad"],
+                               rtol=1e-3, atol=1e-3)
+    res_legacy = gal.fit(key, make_orgs(xs, _mix()), y, get_loss("mse"),
+                         GALConfig(rounds=3, engine="grouped"),
+                         eval_sets={"test": (xs_te, y_te)}, metric_fn=mad)
+    np.testing.assert_allclose(res_gr.history["test_mad"],
+                               res_legacy.history["test_metric"],
+                               rtol=1e-6)

@@ -1,0 +1,47 @@
+"""Hypothesis property sweeps for the Pallas kernels (moved out of
+tests/test_kernels.py so the deterministic kernel suite runs without the
+optional dev dep, matching the repo's importorskip pattern)."""
+import numpy as np
+import pytest
+import jax
+pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly without it
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.ops import flash_attention, residual_xent
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    t=st.integers(1, 200),
+    v=st.integers(2, 700),
+    scale=st.floats(0.1, 8.0),
+)
+def test_residual_xent_property(t, v, scale):
+    """Property: r = onehot - softmax for arbitrary shapes/scales."""
+    key = jax.random.PRNGKey(t * 1000 + v)
+    logits = jax.random.normal(key, (t, v)) * scale
+    labels = jax.random.randint(key, (t,), 0, v)
+    out = residual_xent(logits, labels)
+    want = ref.residual_xent_ref(logits, labels)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    s=st.integers(2, 160),
+    h_pow=st.integers(0, 3),
+    g=st.sampled_from([1, 2, 4]),
+    causal=st.booleans(),
+)
+def test_flash_attention_property(s, h_pow, g, causal):
+    kv = 2 ** h_pow
+    h = kv * g
+    hd = 32
+    key = jax.random.PRNGKey(s * 31 + h)
+    q = jax.random.normal(jax.random.fold_in(key, 1), (1, s, h, hd)) * 0.3
+    k = jax.random.normal(jax.random.fold_in(key, 2), (1, s, kv, hd)) * 0.3
+    v = jax.random.normal(jax.random.fold_in(key, 3), (1, s, kv, hd))
+    out = flash_attention(q, k, v, causal=causal)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

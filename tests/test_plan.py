@@ -77,10 +77,34 @@ def test_width_dependent_init_splits_per_width(rng_np):
     assert any("width" in note for note in plan.notes)
 
 
-def test_dms_is_a_true_fallback(rng_np):
+def test_dms_compiles_into_its_own_group(rng_np):
+    """DMS is no longer a fallback: a head-interface model (MLP) plans into
+    a compiled DMS group keyed by its extractor signature; the plan is
+    never 'homogeneous' (the extractor/head carry belongs to the grouped
+    engine, not scan/shard)."""
+    plan = plan_orgs(make_orgs(_xs(rng_np), MLP((8,)), dms=True))
+    assert plan.compiled and plan.has_dms and not plan.homogeneous
+    assert plan.n_groups == 1 and plan.groups[0].dms
+    assert "DMS" in plan.describe()
+
+
+def test_dms_and_fresh_fit_same_model_split_groups(rng_np):
+    """The same MLP config with and without DMS must NOT share a vmapped
+    group — their fits are different programs."""
+    plan = plan_orgs(make_orgs(_xs(rng_np), MLP((8,)),
+                               dms=[True, False, True, False]))
+    assert plan.compiled and plan.n_groups == 2
+    assert plan.groups[0].dms and not plan.groups[1].dms
+    assert plan.groups[0].indices == (0, 2)
+
+
+def test_dms_without_head_interface_is_a_reason(rng_np):
+    """Linear has no features/init_head/apply_head: DMS cannot trace (and
+    the reference engine could not run it either) — named in the reason."""
     plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), dms=True))
     assert not plan.compiled
     assert "Deep Model Sharing" in plan.reason
+    assert "features" in plan.reason or "init_head" in plan.reason
 
 
 def test_non_scan_safe_model_named_in_reason(rng_np):
@@ -99,12 +123,41 @@ def test_non_scan_safe_model_named_in_reason(rng_np):
     assert "HostModel" in plan.reason and "organization 1" in plan.reason
 
 
-def test_non_ellq_loss_named_in_reason(rng_np):
-    def weird(r, f):
-        return jnp.mean(jnp.square(r - f))       # no .q attribute
+def test_custom_traceable_loss_compiles(rng_np):
+    """A loss without a .q exponent compiles as long as it traces to a
+    scalar: the engines differentiate it inside the scanned round step."""
+    def pseudo_huber(r, f):
+        return jnp.mean(jnp.sqrt(1.0 + jnp.square(r - f)) - 1.0)
 
-    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), local_losses=weird))
-    assert not plan.compiled and "no exponent q" in plan.reason
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(),
+                               local_losses=pseudo_huber))
+    assert plan.compiled and plan.n_groups == 1
+    assert "pseudo_huber" in plan.describe()
+
+
+def test_distinct_custom_losses_split_groups(rng_np):
+    """Custom losses group by callable identity — two different objects
+    cannot share a vmapped fit."""
+    def loss_a(r, f):
+        return jnp.mean(jnp.square(r - f))
+
+    def loss_b(r, f):
+        return jnp.mean(jnp.abs(r - f) ** 3)
+
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(),
+                               local_losses=[loss_a, loss_a, loss_b, loss_a]))
+    assert plan.compiled and plan.n_groups == 2
+    assert plan.groups[0].indices == (0, 1, 3)
+
+
+def test_non_traceable_loss_named_in_reason(rng_np):
+    def host_loss(r, f):
+        import numpy as _np
+        return float(_np.mean(_np.square(_np.asarray(r) - _np.asarray(f))))
+
+    plan = plan_orgs(make_orgs(_xs(rng_np), Linear(), local_losses=host_loss))
+    assert not plan.compiled and "not jax-traceable" in plan.reason
+    assert "host_loss" in plan.reason
 
 
 def test_sample_axis_mismatch_is_a_reason(rng_np):
@@ -121,13 +174,6 @@ def test_eval_width_mismatch_is_a_reason(rng_np):
     y_e = jnp.zeros((16, 1))
     plan = plan_orgs(make_orgs(xs, Linear()), {"test": (xs_e, y_e)})
     assert not plan.compiled and "width" in plan.reason
-
-
-def test_fallback_reason_is_sticky(rng_np):
-    plan = plan_orgs(make_orgs(_xs(rng_np), Linear()))
-    degraded = plan.fallback("first").fallback("second")
-    assert degraded.reason == "first"
-    assert plan.compiled                          # original is untouched
 
 
 def test_plan_lm_orgs_groups_by_cfg(key):

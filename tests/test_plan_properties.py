@@ -1,0 +1,121 @@
+"""Property-based invariants of the org execution planner and the group
+stacking round trip (hypothesis; skips cleanly when the optional dev dep is
+absent, like the other property suites)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+pytest.importorskip("hypothesis")  # optional dev dep; skip cleanly without it
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import lq_loss
+from repro.core.organizations import make_orgs
+from repro.core.plan import _group_key, plan_orgs
+from repro.data.partition import stack_groups, unstack_groups
+from repro.models.zoo import KernelRidge, Linear, MLP, StumpBoost
+
+N_ROWS = 24
+
+
+def _custom_loss(r, f):
+    return jnp.mean(jnp.sqrt(1.0 + jnp.square(r - f)) - 1.0)
+
+
+# per-org spec: (model id, loss id, noise on, dms, slice width)
+_ORG_SPEC = st.tuples(
+    st.sampled_from(["linear", "stumps", "kernel", "mlp"]),
+    st.sampled_from(["q1", "q2", "q4", "custom"]),
+    st.booleans(),
+    st.booleans(),
+    st.integers(2, 5),
+)
+
+_MODELS = {"linear": Linear(), "stumps": StumpBoost(n_stumps=4),
+           "kernel": KernelRidge(), "mlp": MLP((4,), epochs=2)}
+_LOSSES = {"q1": lq_loss(1.0), "q2": lq_loss(2.0), "q4": lq_loss(4.0),
+           "custom": _custom_loss}
+
+
+def _orgs_from_specs(specs, seed):
+    rng = np.random.default_rng(seed)
+    xs = [jnp.asarray(rng.standard_normal((N_ROWS, w)).astype(np.float32))
+          for (_, _, _, _, w) in specs]
+    return make_orgs(
+        xs,
+        [_MODELS[m] for (m, _, _, _, _) in specs],
+        local_losses=[_LOSSES[q] for (_, q, _, _, _) in specs],
+        noise_sigmas=[0.5 if noisy else 0.0
+                      for (_, _, noisy, _, _) in specs],
+        # DMS only for the model that has the extractor/head interface
+        dms=[d and m == "mlp" for (m, _, _, d, _) in specs],
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(specs=st.lists(_ORG_SPEC, min_size=1, max_size=7),
+       seed=st.integers(0, 99))
+def test_groups_partition_the_index_set_exactly(specs, seed):
+    """Every org appears in exactly one group, groups preserve org_ids,
+    and the permutation/inverse pair is a bijection."""
+    orgs = _orgs_from_specs(specs, seed)
+    plan = plan_orgs(orgs)
+    all_indices = sorted(i for g in plan.groups for i in g.indices)
+    assert all_indices == list(range(len(orgs)))
+    for g in plan.groups:
+        assert g.org_ids == tuple(orgs[i].index for i in g.indices)
+    perm = plan.permutation
+    inv = plan.inverse_permutation
+    assert sorted(perm) == list(range(len(orgs)))
+    assert tuple(perm[inv[i]] for i in range(len(orgs))) == \
+        tuple(range(len(orgs)))
+
+
+@settings(max_examples=40, deadline=None)
+@given(specs=st.lists(_ORG_SPEC, min_size=1, max_size=7),
+       seed=st.integers(0, 99))
+def test_every_group_is_key_homogeneous(specs, seed):
+    """Within a group, every org shares the grouping key — model config,
+    local loss, noise sigma, DMS flag (and width where it matters); across
+    groups the keys differ (no two groups could have been merged)."""
+    orgs = _orgs_from_specs(specs, seed)
+    plan = plan_orgs(orgs)
+    group_keys = []
+    for g in plan.groups:
+        keys = {repr(_group_key(orgs[i])) for i in g.indices}
+        assert len(keys) == 1, f"group {g.describe()} mixes keys: {keys}"
+        group_keys.append(keys.pop())
+    assert len(set(group_keys)) == len(group_keys), \
+        "two groups share a key (should have been merged)"
+
+
+@settings(max_examples=40, deadline=None)
+@given(specs=st.lists(_ORG_SPEC, min_size=1, max_size=7),
+       seed=st.integers(0, 99))
+def test_unstack_groups_inverts_stack_groups(specs, seed):
+    """The engine's scatter (``unstack_groups``) is the exact inverse of
+    the planner-driven gather (``stack_groups``): slices come back in org
+    order at their true widths, bit for bit."""
+    orgs = _orgs_from_specs(specs, seed)
+    plan = plan_orgs(orgs)
+    xs = [org.x_train for org in orgs]
+    index_groups = [g.indices for g in plan.groups]
+    stacks, dims, pads = stack_groups(xs, index_groups)
+    back = unstack_groups(stacks, index_groups, dims)
+    for i, (orig, rec) in enumerate(zip(xs, back)):
+        np.testing.assert_array_equal(np.asarray(orig), np.asarray(rec),
+                                      err_msg=f"org {i}")
+
+
+@settings(max_examples=25, deadline=None)
+@given(specs=st.lists(_ORG_SPEC, min_size=1, max_size=7),
+       seed=st.integers(0, 99))
+def test_compiled_verdict_matches_group_flags(specs, seed):
+    """These random mixes contain only traceable models/losses, so the plan
+    always compiles; has_dms/noisy reflect the org flags; 'homogeneous'
+    holds iff there is one noiseless fresh-fit group."""
+    orgs = _orgs_from_specs(specs, seed)
+    plan = plan_orgs(orgs)
+    assert plan.compiled, plan.reason
+    assert plan.has_dms == any(org.dms for org in orgs)
+    assert plan.noisy == any(org.noise_sigma > 0 for org in orgs)
+    assert plan.homogeneous == (plan.n_groups == 1 and not plan.noisy
+                                and not plan.has_dms)

@@ -85,6 +85,70 @@ def test_fast_path_results_survive_refit(rng_np, key):
     np.testing.assert_array_equal(np.asarray(res1.predict(xs_te)), p1)
 
 
+def test_dms_memory_ledger_matches_protocol_oracle(rng_np, key):
+    """history["model_memories"] equals protocol_sim's Table-14 accounting
+    EXACTLY on every engine: DMS orgs hold one live extractor each (the
+    Sec. 5 Tx saving), fresh-fit orgs accumulate one model per round."""
+    from repro.core.protocol_sim import gal_cost, gal_model_memories
+    xs, y, _, _ = _setting(rng_np, n=80)
+    loss = get_loss("mse")
+    rounds, m = 3, 4
+    for engine in ("python", "grouped"):
+        res = gal.fit(key, make_orgs(xs, MLP((8,), epochs=4), dms=True), y,
+                      loss, GALConfig(rounds=rounds, engine=engine))
+        want = gal_cost(y.shape[0], y.shape[-1], m, rounds,
+                        dms=True).model_memories
+        assert res.history["model_memories"][-1] == want, engine
+        assert res.history["model_memories"] == [m] * rounds, engine
+    for engine in ("python", "scan"):
+        res = gal.fit(key, make_orgs(xs, Linear()), y, loss,
+                      GALConfig(rounds=rounds, engine=engine))
+        want = gal_cost(y.shape[0], y.shape[-1], m, rounds,
+                        dms=False).model_memories
+        assert res.history["model_memories"][-1] == want, engine
+        assert res.history["model_memories"] == \
+            gal_model_memories(rounds, [False] * m), engine
+    # mixed DMS + fresh-fit orgs: per-org accounting, engine-independent
+    mix = lambda: make_orgs(  # noqa: E731
+        xs, [MLP((8,), epochs=4), MLP((8,), epochs=4), Linear(), Linear()],
+        dms=[True, True, False, False])
+    for engine in ("python", "grouped"):
+        res = gal.fit(key, mix(), y, loss,
+                      GALConfig(rounds=rounds, engine=engine))
+        assert res.history["model_memories"] == [4, 6, 8], engine
+
+
+def test_grouped_dms_refit_resets_stacked_heads(rng_np, key):
+    """Refit-after-reset on the grouped DMS engine: a second fit on the
+    SAME orgs reproduces a fresh fit exactly (reset_round_state zeroes the
+    stacked heads / extractor / residual history), and unpack_to_orgs
+    restores per-org DMS state that predict_round can replay."""
+    xs, y, xs_te, _ = _setting(rng_np, n=80)
+    loss = get_loss("mse")
+    cfg = GALConfig(rounds=2, engine="grouped")
+    orgs = make_orgs(xs, MLP((8,), epochs=4), dms=True)
+    gal.fit(key, orgs, y + 3.0, loss, cfg)       # pollute with a first fit
+    res2 = gal.fit(key, orgs, y, loss, cfg)
+    fresh = gal.fit(key, make_orgs(xs, MLP((8,), epochs=4), dms=True), y,
+                    loss, cfg)
+    np.testing.assert_allclose(np.asarray(res2.predict(xs_te)),
+                               np.asarray(fresh.predict(xs_te)),
+                               rtol=1e-5, atol=1e-6)
+    # the fused fit never touches live org state...
+    assert all(org.n_rounds_fit == 0 for org in orgs)
+    assert all(org._dms_extractor is None for org in orgs)
+    # ...until unpack_to_orgs restores extractor + per-round head list
+    res2.unpack_to_orgs()
+    assert all(len(org._dms_heads) == res2.rounds for org in orgs)
+    assert all(org._dms_extractor is not None for org in orgs)
+    from repro.data.partition import pad_and_stack
+    xe_stack, _ = pad_and_stack(xs_te, pad_to=res2.group_pads[0])
+    legacy = res2.predict_legacy(list(xe_stack))
+    np.testing.assert_allclose(np.asarray(legacy),
+                               np.asarray(res2.predict(xs_te)),
+                               rtol=1e-4, atol=1e-5)
+
+
 def test_scan_refit_on_same_orgs(rng_np, key):
     """The fused engines never touch org state during fit, but a preceding
     python fit (or unpack_to_orgs) must not leak into a later unpack."""
