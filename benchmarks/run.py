@@ -66,7 +66,7 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
     the DMS + custom-loss mix — plus the stacked-round prediction stage vs
     the per-(round, org) loop. Timings include compilation — one fit call
     is the real unit of work. Rows are appended to ``json_rows`` for the
-    BENCH_PR4.json artifact."""
+    BENCH_PR5.json artifact."""
     from repro.core import gal
     from repro.core.gal import GALConfig
     from repro.core.losses import get_loss, lq_loss
@@ -148,6 +148,65 @@ def gal_engine_benchmark(rounds: int = 16, m: int = 4, n: int = 512,
         json_rows.append({"scenario": "predict_legacy", "engine": "python",
                           "rounds": rounds, "orgs": m,
                           "us_per_call": t_leg})
+
+
+def gal_artifact_benchmark(rounds: int = 8, m: int = 4, n: int = 512,
+                           d: int = 16,
+                           json_rows: list | None = None) -> None:
+    """The fit-once/serve-forever gap: cold start (fit the ensemble, save
+    the artifact) vs warm start (load the artifact, compile the predict
+    path) vs steady-state request latency on the loaded artifact. The
+    warm row is what a production restart pays INSTEAD of the cold fit —
+    the artifact lifecycle's whole value proposition, tracked per PR in
+    the BENCH_PR5.json CI artifact."""
+    import tempfile
+
+    from repro.checkpoint import load_artifact, save_artifact
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import Linear
+
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    ds = make_regression(rng_np, n=n, d=d)
+    train, test = train_test_split(ds, rng_np)
+    xs = split_features(train.x, m)
+    xs_te = split_features(test.x, m)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        t0 = time.perf_counter()
+        res = gal.fit(key, make_orgs(xs, Linear()), train.y,
+                      get_loss("mse"), GALConfig(rounds=rounds))
+        save_artifact(res, tmp)
+        dt_cold = time.perf_counter() - t0
+        print(f"gal_serve_cold_fit_R{rounds}_M{m},{dt_cold * 1e6:.1f},"
+              f"fit+save_s={dt_cold:.2f}")
+
+        t0 = time.perf_counter()
+        art = load_artifact(tmp)
+        serve = jax.jit(lambda xq: art.predict(xq))
+        jax.block_until_ready(serve(xs_te))          # compile = warm-up
+        dt_warm = time.perf_counter() - t0
+        print(f"gal_serve_warm_load_R{rounds}_M{m},{dt_warm * 1e6:.1f},"
+              f"load+compile_s={dt_warm:.2f};"
+              f"cold_over_warm={dt_cold / max(dt_warm, 1e-9):.1f}x")
+
+        t_req = _time_call(serve, xs_te)
+        print(f"gal_serve_artifact_request_R{rounds}_M{m},{t_req:.1f},"
+              f"jitted-predict-cached")
+    if json_rows is not None:
+        json_rows.append({"scenario": "serve_cold_fit", "engine": res.engine,
+                          "rounds": rounds, "orgs": m, "seconds": dt_cold})
+        json_rows.append({"scenario": "serve_warm_load", "engine": art.engine,
+                          "rounds": rounds, "orgs": m, "seconds": dt_warm,
+                          "cold_over_warm": dt_cold / max(dt_warm, 1e-9)})
+        json_rows.append({"scenario": "serve_artifact_request",
+                          "engine": art.engine, "rounds": rounds, "orgs": m,
+                          "us_per_call": t_req})
 
 
 _SHARD_BENCH_SNIPPET = r"""
@@ -259,7 +318,7 @@ def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
 
 
 def write_bench_json(path: str, rows: list) -> None:
-    """Emit the machine-readable benchmark artifact (BENCH_PR4.json):
+    """Emit the machine-readable benchmark artifact (BENCH_PR5.json):
     rounds/sec per engine and scenario — including the heterogeneous
     GB–SVM-mix row — so CI tracks the perf trajectory across PRs."""
     payload = {
@@ -279,7 +338,7 @@ def main() -> None:
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the engine-benchmark rows as machine-"
-                         "readable JSON (the BENCH_PR4.json CI artifact)")
+                         "readable JSON (the BENCH_PR5.json CI artifact)")
     ap.add_argument("--engines-only", action="store_true",
                     help="run only the GAL engine benchmarks (the fast "
                          "CI-artifact path): no tables, no micro, no "
@@ -290,6 +349,9 @@ def main() -> None:
     if args.engines_only:
         print("# gal engine benchmarks (name,us_per_round,derived)")
         gal_engine_benchmark(json_rows=json_rows)
+        print("\n# gal artifact lifecycle: cold fit vs warm load "
+              "(name,us,derived)")
+        gal_artifact_benchmark(json_rows=json_rows)
         print("\n# gal shard engine scaling")
         gal_shard_scaling_benchmark(json_rows=json_rows)
         if args.json_out:
@@ -314,6 +376,10 @@ def main() -> None:
     print("\n# gal engine: fused engines vs legacy python per scenario "
           "(name,us_per_round,derived)")
     gal_engine_benchmark(json_rows=json_rows)
+
+    print("\n# gal artifact lifecycle: cold fit vs warm load "
+          "(name,us,derived)")
+    gal_artifact_benchmark(json_rows=json_rows)
 
     print("\n# gal shard engine scaling: rounds/sec at forced host devices "
           "(name,us_per_round,derived)")

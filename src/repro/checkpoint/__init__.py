@@ -1,1 +1,3 @@
-from repro.checkpoint.checkpoint import save_pytree, load_pytree, GALCheckpoint
+from repro.checkpoint.checkpoint import (ARTIFACT_SCHEMA, GALCheckpoint,
+                                         load_artifact, load_pytree,
+                                         save_artifact, save_pytree)

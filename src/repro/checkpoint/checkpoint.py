@@ -1,24 +1,70 @@
-"""Checkpointing: npz-based pytree save/restore + round-resumable GAL state.
+"""Checkpointing and the GAL artifact lifecycle: fit once, serve forever.
 
-No orbax offline; paths are flattened with jax.tree_util key paths so any
-nested dict/list/tuple pytree of arrays round-trips exactly. The GAL protocol
-checkpoints per assistance round (etas, weights, per-org round params), so an
-interrupted collaboration resumes at the last completed round — the
-production property the paper's "few rounds" claim depends on.
+Two layers live here:
+
+* **pytree round-trips** (``save_pytree`` / ``load_pytree``): npz-based, no
+  orbax offline. Paths are flattened with jax.tree_util key paths so any
+  nested dict/list/tuple pytree of arrays round-trips exactly (bf16 leaves
+  ride as uint16 views). ``load_pytree`` is *self-describing*: called
+  without a ``like`` template it rebuilds the nested dict/list structure
+  from the flattened key paths themselves, so an artifact can be loaded in
+  a process that never held the original pytree (tuples come back as
+  lists — identical under ``tree_map``, which is all the engines do with
+  them).
+
+* **the GAL artifact** (``save_artifact`` / ``load_artifact``): the
+  versioned on-disk form of a compiled-engine ``GALResult`` — everything
+  the Prediction Stage and a resumed fit need to outlive the fitting
+  process:
+
+    - ``manifest.json`` — the ``gal-artifact/v1`` schema tag, the
+      ``GALConfig``, Alice's loss and every group's local loss *as specs*
+      (ell_q losses by exponent, registry losses by name, custom callables
+      by ``__name__`` — re-resolved at load), the execution-plan manifest
+      (``repro.core.plan.plan_to_manifest``: group indices / org ids /
+      model specs / noise sigmas / DMS flags), per-group stacking geometry,
+      etas, the full history (comm/memory ledgers as exact ints), and the
+      resume cursor ``t_next``;
+    - ``arrays.npz`` — one self-describing pytree holding ``f0``, the
+      stacked assistance weights ``(T, M)``, every group's stacked round
+      params, and the round-scan resume carry (ensemble state ``f``,
+      per-eval-set carries, the post-scan RNG key, the early-stop flag,
+      and the DMS extractor/head/residual-history buffers).
+
+  ``load_artifact`` returns a ``GALResult`` with no Organizations attached:
+  ``predict`` / ``predict_proba``-style serving works immediately (the
+  grouped prediction path needs only the plan + stacked params), and
+  ``gal.fit(..., resume_from=...)`` extends the collaboration from round
+  ``t_next`` once the caller re-supplies the private org data. Models are
+  re-instantiated from the ``repro.models.zoo`` registry; custom models
+  and custom losses are resolved through the ``models=`` / ``losses=``
+  maps (the artifact stores only their names — private code never touches
+  disk, matching the paper's "no sharing of models" contract).
+
+The legacy ``GALCheckpoint`` (per-round json+npz dumps) predates the
+compiled engines and remains for the python reference loop's round-level
+dumps; new code should use the artifact API.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import re
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from pathlib import Path
-from typing import Any, Dict, List
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 _SEP = "|"
+
+# the artifact schema this build writes AND the only one it reads; bump on
+# any incompatible layout change so stale artifacts fail loudly at load
+ARTIFACT_SCHEMA = "gal-artifact/v1"
+ARTIFACT_MANIFEST = "manifest.json"
+ARTIFACT_ARRAYS = "arrays.npz"
 
 
 def _key_str(k) -> str:
@@ -29,27 +75,139 @@ def _key_str(k) -> str:
     return f"d:{k}"
 
 
+def _empty_container_paths(tree: Any) -> List[tuple]:
+    """Paths of zero-leaf containers (empty dict/list/tuple, None): they
+    flatten to nothing, so the self-describing loader needs explicit
+    markers to rebuild them (and to keep list indices from shifting)."""
+    found: List[tuple] = []
+
+    def walk(node, prefix):
+        if node is None:
+            found.append((prefix, "none"))
+        elif isinstance(node, dict):
+            if not node:
+                found.append((prefix, "dict"))
+            for k, v in node.items():
+                walk(v, prefix + [f"d:{k}"])
+        elif isinstance(node, (list, tuple)):
+            if not node:
+                found.append((prefix, "list"))
+            for i, v in enumerate(node):
+                walk(v, prefix + [f"i:{i}"])
+
+    walk(tree, [])
+    return found
+
+
 def save_pytree(path: str | Path, tree: Any) -> None:
-    """Save an arbitrary pytree of arrays/scalars to one .npz file."""
+    """Save an arbitrary pytree of arrays/scalars to one .npz file.
+
+    Dict keys become path components joined on ``"|"`` with a ``"@bf16"``
+    dtype marker suffix, so keys that collide with either are rejected
+    loudly here — the self-describing loader would otherwise rebuild a
+    silently wrong structure (e.g. an eval set named ``"a|b"``). Empty
+    dict/list/tuple nodes and ``None`` are recorded as explicit markers
+    (``__empties__``) so the template-free load reproduces them instead of
+    silently dropping them."""
+    def check_parts(parts):
+        for part in parts:
+            if _SEP in part[2:] or part.endswith("@bf16"):
+                raise ValueError(
+                    f"pytree key {part[2:]!r} collides with the flattened "
+                    f"path encoding ({_SEP!r} separator / '@bf16' dtype "
+                    f"marker); rename it (e.g. the eval-set name)")
+        return parts
+
     flat = {}
     for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(_key_str(k) for k in kp) or "__root__"
+        parts = check_parts([_key_str(k) for k in kp])
+        key = _SEP.join(parts) or "__root__"
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":     # npz cannot store bf16
             key = key + "@bf16"
             arr = arr.view(np.uint16)
         flat[key] = arr
+    empties = [[_SEP.join(check_parts(parts)), kind]
+               for parts, kind in _empty_container_paths(tree)]
     # record the treedef structure for exact reconstruction
     structure = jax.tree_util.tree_structure(tree)
     path = Path(path)
     path.parent.mkdir(parents=True, exist_ok=True)
     np.savez(path, __treedef__=np.frombuffer(
-        str(structure).encode(), dtype=np.uint8), **flat)
+        str(structure).encode(), dtype=np.uint8),
+        __empties__=np.frombuffer(
+            json.dumps(empties).encode(), dtype=np.uint8), **flat)
 
 
-def load_pytree(path: str | Path, like: Any) -> Any:
-    """Restore a pytree saved by save_pytree; ``like`` provides structure."""
+_EMPTY_SENTINEL = "__empty__"
+_EMPTY_VALUES = {"dict": dict, "list": list, "none": lambda: None}
+
+
+def _unflatten_self_describing(data) -> Any:
+    """Rebuild the nested dict/list pytree from flattened key paths alone.
+
+    ``d:`` components become dict keys, ``i:`` components list indices
+    (tuples were flattened with ``i:`` too and come back as lists —
+    equivalent under ``tree_map``). A lone ``__root__`` key is a bare
+    leaf. bf16 leaves are recognized by the ``@bf16`` suffix; zero-leaf
+    containers (empty dict/list, None) are restored from the
+    ``__empties__`` markers, keeping list indices aligned."""
+    items = []
+    for key in data.files:
+        if key in ("__treedef__", "__empties__"):
+            continue
+        arr = data[key]
+        if key.endswith("@bf16"):
+            key = key[:-len("@bf16")]
+            arr = jnp.asarray(arr).view(jnp.bfloat16)
+        else:
+            arr = jnp.asarray(arr)
+        items.append((key, arr))
+    empties = (json.loads(bytes(data["__empties__"]).decode())
+               if "__empties__" in data.files else [])
+    if not items and len(empties) == 1 and empties[0][0] == "":
+        return _EMPTY_VALUES[empties[0][1]]()      # whole tree is empty
+    if len(items) == 1 and items[0][0] == "__root__" and not empties:
+        return items[0][1]
+
+    root: Dict[str, Any] = {}
+    for key, arr in items:
+        parts = key.split(_SEP)
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = arr
+    for key, kind in empties:
+        parts = key.split(_SEP)
+        node = root
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+        node[parts[-1]] = {_EMPTY_SENTINEL: kind}
+
+    def finalize(node):
+        if not isinstance(node, dict):
+            return node
+        if set(node) == {_EMPTY_SENTINEL}:
+            return _EMPTY_VALUES[node[_EMPTY_SENTINEL]]()
+        if node and all(k.startswith("i:") for k in node):
+            idx = sorted(node, key=lambda k: int(k[2:]))
+            return [finalize(node[k]) for k in idx]
+        return {k[2:]: finalize(v) for k, v in node.items()}
+
+    return finalize(root)
+
+
+def load_pytree(path: str | Path, like: Any = None) -> Any:
+    """Restore a pytree saved by ``save_pytree``.
+
+    With ``like`` given, its structure AND leaf dtypes are authoritative
+    (exact reconstruction including tuples and custom dtypes). Without it,
+    the structure is rebuilt from the flattened key paths — dicts and
+    lists come back as themselves, tuples as lists — which is what
+    ``load_artifact`` uses to read an artifact in a fresh process."""
     data = np.load(Path(path), allow_pickle=False)
+    if like is None:
+        return _unflatten_self_describing(data)
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
     flat_paths = jax.tree_util.tree_flatten_with_path(like)[0]
     out = []
@@ -65,9 +223,256 @@ def load_pytree(path: str | Path, like: Any) -> Any:
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+# --------------------------------------------------------------------------
+# spec codecs: models and losses as manifest-serializable identities
+# --------------------------------------------------------------------------
+
+def _jsonify(obj: Any) -> Any:
+    """JSON-safe copy: tuples -> lists, numpy scalars -> Python scalars."""
+    if isinstance(obj, dict):
+        return {str(k): _jsonify(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonify(v) for v in obj]
+    if isinstance(obj, (np.integer,)):
+        return int(obj)
+    if isinstance(obj, (np.floating,)):
+        return float(obj)
+    return obj
+
+
+def model_spec(model: Any) -> Dict[str, Any]:
+    """The manifest identity of a local model: zoo models serialize as
+    (registry name, dataclass fields) and reconstruct exactly; duck-typed
+    external models serialize by class name only and must be re-supplied
+    at load (``models={name: instance}``) — private model code never
+    touches the artifact."""
+    from repro.models.zoo import ZOO
+    for name in ZOO.names():
+        if type(model) is ZOO.get(name):
+            fields = (dataclasses.asdict(model)
+                      if dataclasses.is_dataclass(model) else {})
+            return {"kind": "zoo", "name": name, "fields": _jsonify(fields)}
+    return {"kind": "custom", "name": type(model).__name__}
+
+
+def model_from_spec(spec: Dict[str, Any],
+                    models: Optional[Dict[str, Any]] = None) -> Any:
+    """Inverse of ``model_spec``; ``models`` resolves custom names."""
+    if spec["kind"] == "zoo":
+        from repro.models.zoo import ZOO
+        cls = ZOO.get(spec["name"])
+        fields = {k: tuple(v) if isinstance(v, list) else v
+                  for k, v in spec.get("fields", {}).items()}
+        return cls(**fields)
+    name = spec["name"]
+    if models and name in models:
+        return models[name]
+    raise ValueError(
+        f"artifact references custom model {name!r}: its code is not "
+        f"stored (the paper's no-model-sharing contract) — pass "
+        f"load_artifact(..., models={{{name!r}: <instance>}})")
+
+
+def loss_spec(loss: Any) -> Dict[str, Any]:
+    """The manifest identity of a loss: ell_q losses by exponent,
+    registry ``Loss`` objects by name, custom callables by ``__name__``
+    (re-resolved at load via ``losses={name: fn}``)."""
+    if loss is None:
+        return {"kind": "none"}
+    q = getattr(loss, "q", None)
+    if q is not None:
+        return {"kind": "lq", "q": float(q)}
+    from repro.core.losses import LOSSES
+    name = getattr(loss, "name", None)
+    if name is not None and name in LOSSES:
+        return {"kind": "registry", "name": name}
+    return {"kind": "custom",
+            "name": getattr(loss, "__name__", type(loss).__name__)}
+
+
+def loss_from_spec(spec: Dict[str, Any],
+                   losses: Optional[Dict[str, Callable]] = None) -> Any:
+    """Inverse of ``loss_spec``; ``losses`` resolves custom names."""
+    kind = spec["kind"]
+    if kind == "none":
+        return None
+    if kind == "lq":
+        from repro.core.losses import lq_loss
+        return lq_loss(spec["q"])
+    if kind == "registry":
+        from repro.core.losses import get_loss
+        return get_loss(spec["name"])
+    name = spec["name"]
+    if losses and name in losses:
+        return losses[name]
+    raise ValueError(
+        f"artifact references custom loss {name!r}: its code is not "
+        f"stored — pass load_artifact(..., losses={{{name!r}: <callable>}})")
+
+
+# --------------------------------------------------------------------------
+# the GAL artifact: save / load a complete compiled-engine GALResult
+# --------------------------------------------------------------------------
+
+def save_artifact(result: Any, path: str | Path) -> Path:
+    """Persist a compiled-engine ``GALResult`` as a versioned artifact dir.
+
+    Writes ``manifest.json`` + ``arrays.npz`` (see the module docstring
+    for the exact field inventory). Only compiled-engine results can be
+    saved: a python-reference result holds its round params inside live
+    ``Organization`` objects, which the artifact deliberately never
+    serializes — refit with ``engine="scan"/"grouped"/"shard"`` (or
+    ``"auto"``) to get a self-contained result."""
+    from repro.core.plan import plan_to_manifest
+    if result.plan is None or result.group_params is None:
+        raise ValueError(
+            "only compiled-engine results can be saved as artifacts: this "
+            f"result ran engine={result.engine!r}, whose round params live "
+            "inside the Organization objects — refit with engine='auto' "
+            "(or 'scan'/'grouped'/'shard') for a self-contained result")
+    path = Path(path)
+    path.mkdir(parents=True, exist_ok=True)
+    # the manifest is the commit marker (written LAST): drop any stale one
+    # first so a crash mid-save leaves an unloadable directory — never a
+    # loadable mix of old manifest and new arrays
+    (path / ARTIFACT_MANIFEST).unlink(missing_ok=True)
+
+    n_orgs = result.plan.n_orgs
+    weights = (np.stack([np.asarray(w) for w in result.weights])
+               if result.weights else np.zeros((0, n_orgs), np.float32))
+    # a DMS group's fitted ensemble IS its resume carry (the shared
+    # extractor + stacked head buffer): when the carry is saved below,
+    # store that pytree once and let load_artifact alias it back into
+    # group_params — otherwise every DMS artifact would double its
+    # dominant payload
+    dms_in_carry = result.resume_state is not None
+    arrays: Dict[str, Any] = {
+        "f0": result.f0,
+        "weights": weights,
+        "group_params": {
+            f"g{gi}": gp for gi, gp in enumerate(result.group_params)
+            if not (dms_in_carry and result.plan.groups[gi].dms)},
+    }
+    t_next = None
+    eval_names: List[str] = []
+    if result.resume_state is not None:
+        rs = result.resume_state
+        t_next = int(rs["t_next"])
+        eval_names = sorted(rs.get("f_evals", {}))
+        arrays["resume"] = {
+            "f": rs["f"], "f_evals": dict(rs.get("f_evals", {})),
+            "key": rs["key"], "active": rs["active"],
+            "state": dict(rs.get("state", {})),
+        }
+    save_pytree(path / ARTIFACT_ARRAYS, arrays)
+
+    manifest = {
+        "schema": ARTIFACT_SCHEMA,
+        "engine": result.engine,
+        "config": (_jsonify(dataclasses.asdict(result.config))
+                   if result.config is not None else None),
+        "loss": loss_spec(result.loss),
+        "plan": plan_to_manifest(result.plan, model_spec, loss_spec),
+        "group_dims": _jsonify(result.group_dims),
+        "group_pads": _jsonify(result.group_pads),
+        "etas": [float(e) for e in result.etas],
+        "history": _jsonify(result.history),
+        "rounds": int(result.rounds),
+        "n_orgs": int(n_orgs),
+        "t_next": t_next,
+        "eval_names": eval_names,
+    }
+    (path / ARTIFACT_MANIFEST).write_text(json.dumps(manifest, indent=2))
+    return path
+
+
+def load_artifact(path: str | Path,
+                  losses: Optional[Dict[str, Callable]] = None,
+                  models: Optional[Dict[str, Any]] = None) -> Any:
+    """Load a ``save_artifact`` directory back into a ``GALResult``.
+
+    The result has NO Organizations attached (``orgs=[]``): ``predict``
+    works immediately through the grouped stacked-params path and is
+    bitwise-identical to the in-memory result at every round prefix;
+    ``unpack_to_orgs``/``predict_legacy`` need live orgs and stay off
+    limits until the caller re-attaches them. Pass the loaded result (or
+    the path itself) as ``gal.fit(..., resume_from=...)`` together with
+    the original org data to extend the collaboration from round
+    ``t_next``.
+
+    ``losses`` / ``models`` resolve custom (non-registry) identities the
+    manifest stores by name only; unknown names raise."""
+    from repro.core.gal import GALConfig, GALResult
+    from repro.core.plan import plan_from_manifest
+    path = Path(path)
+    man_path = path / ARTIFACT_MANIFEST
+    if not man_path.exists():
+        raise ValueError(f"{path} is not a GAL artifact directory "
+                         f"(missing {ARTIFACT_MANIFEST})")
+    manifest = json.loads(man_path.read_text())
+    schema = manifest.get("schema")
+    if schema != ARTIFACT_SCHEMA:
+        raise ValueError(
+            f"unsupported artifact schema {schema!r}: this build reads "
+            f"{ARTIFACT_SCHEMA!r} (re-fit and re-save, or load with a "
+            f"matching build)")
+
+    plan = plan_from_manifest(
+        manifest["plan"],
+        lambda s: model_from_spec(s, models),
+        lambda s: loss_from_spec(s, losses))
+    loss = loss_from_spec(manifest["loss"], losses)
+    arrays = load_pytree(path / ARTIFACT_ARRAYS)
+
+    weights = [w for w in arrays["weights"]]
+    history = {k: list(v) for k, v in manifest["history"].items()}
+    resume_state = None
+    if manifest.get("t_next") is not None:
+        rs = arrays.get("resume", {})
+        resume_state = {
+            "t_next": int(manifest["t_next"]),
+            "f": rs["f"],
+            "f_evals": dict(rs.get("f_evals", {})),
+            "key": rs["key"],
+            "active": rs["active"],
+            "state": dict(rs.get("state", {})),
+        }
+    stored_gp = arrays.get("group_params", {})
+    group_params = [
+        # DMS groups are stored once, inside the resume carry (see
+        # save_artifact) — alias the shared pytree back
+        stored_gp.get(f"g{gi}", (resume_state or {}).get("state",
+                                                         {}).get(f"g{gi}"))
+        for gi in range(plan.n_groups)
+    ]
+    config = (GALConfig(**manifest["config"])
+              if manifest.get("config") else None)
+    single = plan.n_groups == 1 and not plan.has_dms
+    group_dims = manifest["group_dims"]
+    group_pads = manifest["group_pads"]
+    return GALResult(
+        orgs=[], loss=loss, f0=arrays["f0"],
+        etas=[float(e) for e in manifest["etas"]],
+        weights=weights, history=history,
+        stacked_params=group_params[0] if single else None,
+        model=plan.groups[0].model if single else None,
+        org_dims=group_dims[0] if single else None,
+        pad_to=group_pads[0] if single else None,
+        plan=plan, group_params=group_params,
+        group_dims=group_dims, group_pads=group_pads,
+        mesh_devices=0, engine=manifest["engine"],
+        config=config, resume_state=resume_state,
+    )
+
+
+# --------------------------------------------------------------------------
+# legacy per-round checkpoints (python reference loop)
+# --------------------------------------------------------------------------
+
 @dataclass
 class GALCheckpoint:
-    """Round-resumable GAL collaboration state."""
+    """Round-resumable GAL collaboration state (legacy per-round dumps;
+    the compiled engines use ``save_artifact``/``load_artifact``)."""
     directory: Path
 
     def __init__(self, directory: str | Path):

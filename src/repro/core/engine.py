@@ -177,9 +177,12 @@ def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
 
 
 def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
-                m, n, k, masked, metrics, alice_loss, state0=()):
+                m, n, k, masked, metrics, alice_loss, state0=(), t0=0,
+                restore=None):
     """The shared T-round loop of both fused engines: Alg. 1 steps 1-6
-    traced once and scanned ``config.rounds`` times.
+    traced once and scanned over rounds ``t0 .. config.rounds`` (``t0=0``
+    for a fresh fit; a resumed fit restores the scan carry and picks up
+    mid-sequence).
 
     The org axis enters ONLY through two primitives supplied by the caller:
 
@@ -204,9 +207,20 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
     each eval set gets one history column per metric, so the whole eval
     curve stays inside the single post-scan host sync.
 
+    ``restore`` resumes an interrupted collaboration: a
+    ``(f, f_evals, active)`` triple (the artifact's saved carry — the
+    ensemble state after round ``t0``, the per-eval-set carries, and the
+    early-stop flag) replaces the cold-start carry, and ``key`` must be
+    the post-round-``t0`` RNG key, so the scanned rounds ``t0..T`` draw
+    exactly what an uninterrupted ``T``-round fit would have drawn (the
+    per-round split chain continues where it left off — including through
+    early-stop-masked rounds, which still split).
+
     Everything else — residual, privacy, weight fit, eta line search,
     masked early stopping, history bookkeeping — is engine-independent and
-    lives here exactly once. Returns ``(outs, init, state_final)``.
+    lives here exactly once. Returns ``(outs, init, carry_final)``; the
+    full final carry is what ``GALResult.resume_state`` (and therefore the
+    on-disk artifact) persists.
     """
     def round_step(carry, t):
         f, f_evals, key, active, state = carry
@@ -253,19 +267,29 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
                       if masked else active)
         return (f_new, new_evals, key, new_active, state), outs
 
-    f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
-    f_evals = {
-        name: jnp.broadcast_to(loss.init_prediction(y_in), (y_e.shape[0], k))
-        for name, (_, y_e) in evals_in.items()
-    }
+    if restore is None:
+        f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
+        f_evals = {
+            name: jnp.broadcast_to(loss.init_prediction(y_in),
+                                   (y_e.shape[0], k))
+            for name, (_, y_e) in evals_in.items()
+        }
+        active0 = jnp.asarray(True)
+    else:
+        f, f_evals_r, active0 = restore
+        f_evals = {name: f_evals_r[name] for name in evals_in}
+        active0 = jnp.asarray(active0)
+    # on a resume the "init" row is the restored-carry loss, not round 0's —
+    # the caller stitches the artifact's history in front and drops it
     init = {"train_loss": loss(y_in, f)}
     for name, (_, y_e) in evals_in.items():
         init[f"{name}_loss"] = loss(y_e, f_evals[name])
         for mname, metric_fn in (metrics or {}).items():
             init[f"{name}_{mname}"] = metric_fn(y_e, f_evals[name])
-    carry0 = (f, f_evals, key, jnp.asarray(True), state0)
-    carry, outs = jax.lax.scan(round_step, carry0, jnp.arange(config.rounds))
-    return outs, init, carry[-1]
+    carry0 = (f, f_evals, key, active0, state0)
+    carry, outs = jax.lax.scan(round_step, carry0,
+                               jnp.arange(t0, config.rounds))
+    return outs, init, carry
 
 
 def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
@@ -335,11 +359,40 @@ def _dms_apply(model, ext_m, heads_m, t, x_m):
     return model.apply_head(head_t, feats)
 
 
+def _pad_rounds(resume_state: Dict[str, Any], groups, t0: int,
+                rounds: int) -> Dict[str, Any]:
+    """Grow a restored DMS carry from ``t0`` round slots to ``rounds``:
+    the shared residual-history buffer pads on axis 0, every group's
+    stacked head buffer on axis 1 (after the org axis). The padding is
+    zeros — exactly what an uninterrupted ``rounds``-round fit would hold
+    in its not-yet-live slots, so the masked per-slot DMS objective is
+    unchanged term for term."""
+    pad = rounds - t0
+    state = dict(resume_state)
+    if pad > 0 and "rhist" in state:
+        rh = jnp.asarray(state["rhist"])
+        state["rhist"] = jnp.pad(rh, ((0, pad),) + ((0, 0),) * (rh.ndim - 1))
+        for gi, g in enumerate(groups):
+            if not g.dms:
+                continue
+            gs = state[f"g{gi}"]
+            state[f"g{gi}"] = {
+                "extractor": gs["extractor"],
+                "heads": jax.tree_util.tree_map(
+                    lambda l: jnp.pad(
+                        jnp.asarray(l),
+                        ((0, 0), (0, pad)) + ((0, 0),) * (l.ndim - 2)),
+                    gs["heads"]),
+            }
+    return state
+
+
 def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                 loss: Loss, config: Any,
                 eval_sets: Optional[Dict[str, tuple]] = None,
                 metrics: Optional[Dict[str, Callable]] = None, *,
-                plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
+                plan: Optional[ExecutionPlan] = None,
+                resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Run Algorithm 1 as one jitted scan over the planner's groups.
 
     Every group is a ``jax.vmap`` of its own model over its own stacked
@@ -365,6 +418,13 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
     the per-group ``group_dims`` / ``group_pads`` geometry, and —
     single-group fresh-fit plans only — the legacy ``params`` / ``dims`` /
     ``pad_to`` fields.
+
+    ``resume`` (built by ``gal.fit(..., resume_from=...)``) restores the
+    round-scan carry of a saved artifact — the ensemble state, per-eval
+    carries, post-scan RNG key, early-stop flag, and (for DMS plans) the
+    extractor/head/residual buffers, padded out to the new round count —
+    and scans only rounds ``t_next .. config.rounds``; the returned dict
+    then covers the NEW rounds only (the caller stitches).
     """
     if plan is None:
         plan = plan_orgs(orgs, eval_sets)
@@ -399,13 +459,34 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                       else jax.device_put(y_e, org_replicated(mesh)))
             eval_stacks[name] = (tuple(stacks_e), y_e_in)
 
-    def run(key, y_dev, xg_in, evals_in):
+    t0 = 0
+    key0 = rng
+    resume_in = None
+    if resume is not None:
+        t0 = int(resume["t_next"])
+        key0 = jnp.asarray(resume["key"])
+        resume_in = {
+            "f": jnp.asarray(resume["f"]),
+            "f_evals": {nm: jnp.asarray(v)
+                        for nm, v in resume.get("f_evals", {}).items()},
+            "active": jnp.asarray(resume["active"]),
+            "state": _pad_rounds(resume.get("state", {}) or {}, groups,
+                                 t0, config.rounds),
+        }
+        if mesh is not None:
+            resume_in = jax.tree_util.tree_map(
+                lambda a: jax.device_put(a, org_replicated(mesh)), resume_in)
+
+    def run(key, y_dev, xg_in, evals_in, res_in):
         # DMS carry: one shared (T, N, K) residual-history buffer plus each
         # DMS group's extractor stack and (M_g, T, ...) head buffers. The
         # extractor inits replicate the reference exactly: round 0's
         # k_round is split(rng)[1], and org m's init key fold_in(., index).
-        state0: Dict[str, Any] = {}
-        if plan.has_dms:
+        # On a resume the carry arrives fully formed from the artifact.
+        state0: Dict[str, Any] = {} if res_in is None else res_in["state"]
+        restore = (None if res_in is None
+                   else (res_in["f"], res_in["f_evals"], res_in["active"]))
+        if plan.has_dms and res_in is None:
             k_round0 = jax.random.split(key)[1]
             state0["rhist"] = jnp.zeros((config.rounds, n, k), y_dev.dtype)
             for gi, g in enumerate(groups):
@@ -510,10 +591,12 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
         return _run_rounds(key, y_dev, evals_in, lambda r: r, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
                            masked=masked, metrics=metrics,
-                           alice_loss=alice_loss, state0=state0)
+                           alice_loss=alice_loss, state0=state0, t0=t0,
+                           restore=restore)
 
-    outs, init, state_final = jax.jit(run)(rng, y_in, tuple(group_x),
-                                           eval_stacks)
+    outs, init, carry = jax.jit(run)(key0, y_in, tuple(group_x),
+                                     eval_stacks, resume_in)
+    state_final = carry[4]
     bcast_b, gather_b = gal_round_bytes(
         n, k, m, [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
     dms_flags = [False] * m
@@ -521,13 +604,13 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
         for i in g.indices:
             dms_flags[i] = g.dms
     single = len(groups) == 1 and not plan.has_dms
-    out = _finalize(outs, init, masked, config.rounds,
+    out = _finalize(outs, init, masked, config.rounds - t0,
                     dims=group_dims[0] if single else None,
                     pad_to=group_pads[0] if single else None,
                     comm={"comm_broadcast_bytes": bcast_b,
                           "comm_gather_bytes": gather_b,
                           "model_memories": gal_model_memories(
-                              config.rounds, dms_flags)})
+                              config.rounds, dms_flags)[t0:]})
     group_params = list(out["params"])            # tuple trimmed by _finalize
     for gi, g in enumerate(groups):
         if g.dms:
@@ -540,24 +623,33 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
     out["group_pads"] = group_pads
     out["plan"] = plan
     out["mesh_devices"] = 0 if mesh is None else len(jax.devices())
+    # the final round-scan carry, verbatim: what save_artifact persists and
+    # a later fit(resume_from=...) restores. The key has been split once
+    # per scanned round (masked rounds included), so resuming continues
+    # the exact per-round draw chain of an uninterrupted longer fit.
+    out["resume"] = {"t_next": config.rounds, "f": carry[0],
+                     "f_evals": carry[1], "key": carry[2],
+                     "active": carry[3], "state": state_final}
     return out
 
 
 def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
              config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
              metrics: Optional[Dict[str, Callable]] = None, *,
-             plan: Optional[ExecutionPlan] = None) -> Dict[str, Any]:
+             plan: Optional[ExecutionPlan] = None,
+             resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """The legacy homogeneous fast path: ``fit_grouped`` on a single-group
     plan (one model vmapped over one org stack). Kept as the named engine
     behind ``GALConfig.engine="scan"``; the dispatch in ``gal.fit`` enforces
     the single-noiseless-group contract before calling it."""
     return fit_grouped(rng, orgs, y, loss, config, eval_sets, metrics,
-                       plan=plan)
+                       plan=plan, resume=resume)
 
 
 def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
               config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
-              metrics: Optional[Dict[str, Callable]] = None) -> Dict[str, Any]:
+              metrics: Optional[Dict[str, Callable]] = None,
+              resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
     """Run Algorithm 1 org-sharded across devices (see the module docstring).
 
     Same contract as ``fit_scan`` — the T-round ``lax.scan``, the single
@@ -568,7 +660,12 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     direction psum). The returned history carries the per-round
     communication ledger (``comm_broadcast_bytes`` / ``comm_gather_bytes``,
     paper Table-14 convention: Alice already holds her own residual copy,
-    every org — Alice included — ships its fitted values)."""
+    every org — Alice included — ships its fitted values).
+
+    ``resume`` restores an artifact's round-scan carry (replicated across
+    the mesh — the ensemble state and RNG chain are org-independent) and
+    scans rounds ``t_next .. config.rounds`` only, exactly as
+    ``fit_grouped`` does; shard plans are stateless (no DMS carry)."""
     m = len(orgs)
     if not org_mesh_eligible(m):
         raise ValueError(
@@ -598,7 +695,21 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                                  jax.device_put(y_e, org_replicated(mesh)))
             eval_in_specs[name] = (P("org"), P())
 
-    def run(key, y_in, x_in, ids_in, evals_in):
+    t0 = 0
+    key0 = rng
+    resume_in = None
+    if resume is not None:
+        t0 = int(resume["t_next"])
+        key0 = jnp.asarray(resume["key"])
+        # the restored carry is org-independent: replicate it on the mesh
+        resume_in = jax.tree_util.tree_map(
+            lambda a: jax.device_put(jnp.asarray(a), org_replicated(mesh)),
+            {"f": resume["f"],
+             "f_evals": {nm: resume.get("f_evals", {})[nm]
+                         for nm in eval_stacks},
+             "active": resume["active"]})
+
+    def run(key, y_in, x_in, ids_in, evals_in, res_in=None):
         my_x = x_in[0]                 # this device's org slice (N, d_max)
         my_id = ids_in[0]
         pos = jax.lax.axis_index("org")
@@ -629,10 +740,12 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
             params_out = jax.tree_util.tree_map(lambda l: l[None], params_m)
             return state, params_out, preds, combine
 
+        restore = (None if res_in is None
+                   else (res_in["f"], res_in["f_evals"], res_in["active"]))
         return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
                            masked=masked, metrics=metrics,
-                           alice_loss=alice_loss)
+                           alice_loss=alice_loss, t0=t0, restore=restore)
 
     # everything in the scalar bundle is replicated (collectives + identical
     # per-device programs on replicated inputs); only the per-round params
@@ -643,14 +756,24 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
         out_specs[f"{name}_loss"] = P()
         for mname in (metrics or {}):
             out_specs[f"{name}_{mname}"] = P()
+    # the returned carry is fully replicated: ensemble state, per-eval
+    # carries, key and early-stop flag ride the collectives; the state
+    # slot is the empty tuple (shard plans are stateless)
+    carry_specs = (P(), {name: P() for name in eval_stacks}, P(), P(), ())
+    in_specs = [P(), P(), P("org"), P("org"), eval_in_specs]
+    operands = [key0, y_dev, x_stack, org_ids, eval_stacks]
+    if resume_in is not None:
+        in_specs.append({"f": P(),
+                         "f_evals": {name: P() for name in eval_stacks},
+                         "active": P()})
+        operands.append(resume_in)
     run_sharded = shard_map(
         run, mesh=mesh,
-        in_specs=(P(), P(), P("org"), P("org"), eval_in_specs),
-        out_specs=(out_specs, P(), ()),
+        in_specs=tuple(in_specs),
+        out_specs=(out_specs, P(), carry_specs),
         check_rep=False,
     )
-    outs, init, _ = jax.jit(run_sharded)(rng, y_dev, x_stack, org_ids,
-                                         eval_stacks)
+    outs, init, carry = jax.jit(run_sharded)(*operands)
     # per-round ledger of the three collectives above, from the (static)
     # operand shapes — exact ints, Table-14 convention (Alice already holds
     # her residual copy; all M orgs ship fitted values for the train AND
@@ -658,11 +781,15 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     # engine's ledger comes from, so the history is engine-independent.
     bcast_b, gather_b = gal_round_bytes(
         n, k, m, [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()])
-    return _finalize(outs, init, masked, config.rounds, dims, pad_to,
-                     comm={"comm_broadcast_bytes": bcast_b,
-                           "comm_gather_bytes": gather_b,
-                           "model_memories": gal_model_memories(
-                               config.rounds, [False] * m)})
+    out = _finalize(outs, init, masked, config.rounds - t0, dims, pad_to,
+                    comm={"comm_broadcast_bytes": bcast_b,
+                          "comm_gather_bytes": gather_b,
+                          "model_memories": gal_model_memories(
+                              config.rounds, [False] * m)[t0:]})
+    out["resume"] = {"t_next": config.rounds, "f": carry[0],
+                     "f_evals": carry[1], "key": carry[2],
+                     "active": carry[3], "state": {}}
+    return out
 
 
 def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],

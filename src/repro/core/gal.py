@@ -51,10 +51,12 @@ device-side on every engine (``metrics=...`` resolved from
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from pathlib import Path
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import engine as engine_mod
 from repro.core.losses import Loss, lq_loss
@@ -173,6 +175,16 @@ class GALResult:
     group_pads: Optional[List[Optional[int]]] = None
     mesh_devices: int = 0              # devices the group stacks sharded over
     engine: str = "python"
+    # the config this result was fit with (stored in the artifact manifest
+    # and compat-checked on resume)
+    config: Optional["GALConfig"] = None
+    # compiled engines only: the final round-scan carry — ensemble state f,
+    # per-eval-set carries, post-scan RNG key, early-stop flag, DMS
+    # extractor/head/residual buffers, and the resume cursor t_next. This
+    # is what checkpoint.save_artifact persists and
+    # fit(..., resume_from=...) restores; python-engine results keep None
+    # (their state lives in the Organization objects and cannot resume).
+    resume_state: Optional[Dict[str, Any]] = None
 
     @property
     def rounds(self) -> int:
@@ -205,6 +217,12 @@ class GALResult:
         the same org objects resets it (see
         ``Organization.reset_round_state``) and invalidates this path for
         results of earlier fits — refit fresh orgs to keep old results."""
+        if not self.orgs:
+            raise ValueError(
+                "this result has no Organizations attached (loaded from an "
+                "artifact): predict() serves directly from the stacked "
+                "group params; the legacy per-(round, org) path needs live "
+                "orgs")
         t_max = self.rounds if rounds is None else min(rounds, self.rounds)
         n = xs[0].shape[0]
         f = jnp.broadcast_to(self.f0, (n, self.f0.shape[-1]))
@@ -223,6 +241,11 @@ class GALResult:
         with ``repro.data.partition.pad_and_stack`` before applying them.
         DMS groups restore the shared extractor and the per-round head list
         from the stacked ``(T, ...)`` head buffer."""
+        if not self.orgs:
+            raise ValueError(
+                "this result has no Organizations attached (loaded from an "
+                "artifact): there is nothing to unpack into — serve through "
+                "predict(), or resume the fit with the original org data")
         if self.group_params is not None and self.plan is not None:
             for gi, g in enumerate(self.plan.groups):
                 for j, i in enumerate(g.indices):
@@ -258,7 +281,8 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         config: GALConfig = GALConfig(),
         eval_sets: Optional[Dict[str, tuple]] = None,
         metric_fn: Optional[Callable] = None,
-        metrics: Optional[Sequence] = None) -> GALResult:
+        metrics: Optional[Sequence] = None,
+        resume_from: Any = None) -> GALResult:
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
     validation protocol), producing the per-round curves of Fig. 4.
@@ -271,6 +295,19 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     but is now traced device-side on EVERY engine (including the Python
     reference); non-traceable callables raise up front.
 
+    ``resume_from`` extends a previously fitted collaboration instead of
+    starting one: pass a compiled-engine ``GALResult`` (in-memory) or the
+    path of a ``checkpoint.save_artifact`` directory. The engines restore
+    the round-scan carry — ensemble state, per-eval carries, RNG chain,
+    early-stop flag, DMS buffers — and run only rounds ``t0..T``
+    (``t0`` = the artifact's completed rounds, ``T = config.rounds``),
+    appending etas/weights/history columns so the resumed result is
+    draw-for-draw identical to an uninterrupted ``T``-round fit. The org
+    set must plan into the identical group partition (same models, losses,
+    sigmas, slice widths), the config must match except ``rounds`` /
+    ``engine``, and the eval-set names must match the saved carries; any
+    divergence raises with the specific mismatch.
+
     Engine dispatch is planner-driven: ``repro.core.plan.plan_orgs``
     partitions the orgs into homogeneous groups or names the reason the
     compiled engines cannot run; forcing a compiled engine on an
@@ -282,6 +319,44 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     metric_map = _resolve_metrics(metric_fn, metrics, eval_sets)
     plan = plan_orgs(orgs, eval_sets,
                      probe_shape=(int(y.shape[0]), int(y.shape[-1])))
+
+    resume_art = resume_eng = None
+    if resume_from is not None:
+        if isinstance(resume_from, (str, Path)):
+            from repro.checkpoint.checkpoint import load_artifact
+            # custom (non-registry) models/losses are stored by name only;
+            # the org set being resumed holds the live objects, so resolve
+            # the artifact's names against them (the artifact stores names,
+            # not code — supplying the same-named implementation is the
+            # caller's side of that contract, as with load_artifact)
+            models_map: Dict[str, Any] = {}
+            losses_map: Dict[str, Any] = {}
+            for o in orgs:
+                models_map.setdefault(type(o.model).__name__, o.model)
+                if o.local_loss is not None:
+                    # same name fallback chain as checkpoint.loss_spec, so
+                    # partials/callable instances resolve too
+                    losses_map.setdefault(
+                        getattr(o.local_loss, "__name__",
+                                type(o.local_loss).__name__), o.local_loss)
+            losses_map.setdefault(
+                getattr(loss, "__name__", type(loss).__name__), loss)
+            resume_art = load_artifact(resume_from, losses=losses_map,
+                                       models=models_map)
+        else:
+            resume_art = resume_from
+        if config.engine == "python":
+            raise ValueError(
+                "resume_from needs a compiled engine (the python reference "
+                "loop holds its state in live Organization objects and "
+                "cannot restore an artifact carry); use engine='auto'")
+        if not plan.compiled:
+            raise ValueError(
+                f"resume_from needs a compilable organization set: "
+                f"{plan.reason}")
+        resume_eng = _prepare_resume(resume_art, orgs, plan, y, loss,
+                                     config, eval_sets, metric_map)
+
     if not plan.compiled:
         if config.engine in _COMPILED_ENGINES:
             # the ONE ineligibility path for every compiled engine: the
@@ -303,6 +378,16 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
     if config.engine == "python":
         return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
+
+    result = _dispatch_compiled(rng, orgs, y, loss, config, eval_sets,
+                                metric_map, plan, resume_eng)
+    if resume_art is not None:
+        result = _stitch_resume(resume_art, result, plan)
+    return result
+
+
+def _dispatch_compiled(rng, orgs, y, loss, config, eval_sets, metric_map,
+                       plan, resume) -> GALResult:
     if config.engine == "scan":
         if not plan.homogeneous:
             raise ValueError(
@@ -310,34 +395,41 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
                 f"planner found {plan.describe()} — use engine='grouped' "
                 "(or 'auto') to fuse heterogeneous/noisy/DMS organizations")
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_map)
+                         rng, orgs, y, loss, config, eval_sets, metric_map,
+                         resume=resume)
     if config.engine == "shard":
         if plan.homogeneous:
             # fit_shard itself raises the org-mesh "must divide" error
             return _fit_fast(engine_mod.fit_shard, "shard", plan,
                              rng, orgs, y, loss, config, eval_sets,
-                             metric_map)
+                             metric_map, resume=resume)
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         require_mesh=True)
+                         require_mesh=True, resume=resume)
     if config.engine == "grouped":
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_map)
+                         rng, orgs, y, loss, config, eval_sets, metric_map,
+                         resume=resume)
     # auto: most capable engine that applies
     if plan.homogeneous and org_mesh_eligible(len(orgs)):
         return _fit_fast(engine_mod.fit_shard, "shard", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_map)
+                         rng, orgs, y, loss, config, eval_sets, metric_map,
+                         resume=resume)
     if plan.homogeneous:
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
-                         rng, orgs, y, loss, config, eval_sets, metric_map)
+                         rng, orgs, y, loss, config, eval_sets, metric_map,
+                         resume=resume)
     return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
-                     rng, orgs, y, loss, config, eval_sets, metric_map)
+                     rng, orgs, y, loss, config, eval_sets, metric_map,
+                     resume=resume)
 
 
 def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
-              metrics, require_mesh: bool = False) -> GALResult:
+              metrics, require_mesh: bool = False,
+              resume: Optional[Dict[str, Any]] = None) -> GALResult:
     if engine_fn is engine_mod.fit_shard:
-        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics)
+        out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics,
+                        resume=resume)
     else:
         if require_mesh:
             from repro.launch.mesh import grouped_mesh_eligible
@@ -354,12 +446,12 @@ def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
                     "a multi-device host; use engine='grouped' for the "
                     "single-host fused path")
         out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics,
-                        plan=plan)
-    return _fast_result(orgs, y, loss, out, name, plan)
+                        plan=plan, resume=resume)
+    return _fast_result(orgs, y, loss, out, name, plan, config)
 
 
-def _fast_result(orgs, y, loss, out, engine: str,
-                 plan: ExecutionPlan) -> GALResult:
+def _fast_result(orgs, y, loss, out, engine: str, plan: ExecutionPlan,
+                 config: Optional[GALConfig] = None) -> GALResult:
     single = plan.n_groups == 1 and not plan.has_dms
     group_params = out.get("group_params")
     if group_params is None:            # fit_shard: legacy single-stack dict
@@ -378,8 +470,174 @@ def _fast_result(orgs, y, loss, out, engine: str,
         pad_to=group_pads[0] if single else None,
         plan=plan, group_params=group_params, group_dims=group_dims,
         group_pads=group_pads, mesh_devices=out.get("mesh_devices", 0),
-        engine=engine,
+        engine=engine, config=config, resume_state=out.get("resume"),
     )
+
+
+# history columns with NO round-0 init row (appended per executed round
+# only): the stitcher concatenates them verbatim, everything else drops
+# the resumed segment's restored-carry "init" entry first
+_LEDGER_COLS = ("comm_broadcast_bytes", "comm_gather_bytes",
+                "model_memories")
+
+
+def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
+                    config: GALConfig, eval_sets,
+                    metric_map: Optional[Dict[str, Callable]] = None
+                    ) -> Dict[str, Any]:
+    """Validate a resume request against the artifact and build the engine
+    resume dict. Every check raises with the specific mismatch — a resumed
+    carry on the wrong org set / config / data would produce silently
+    wrong rounds, which is strictly worse than an error."""
+    import dataclasses as _dc
+
+    from repro.checkpoint.checkpoint import loss_spec, model_spec
+    from repro.core.plan import plan_mismatch, plan_to_manifest
+    from repro.data.partition import group_widths
+
+    rs = art.resume_state
+    if rs is None:
+        raise ValueError(
+            "this result/artifact has no resume state: python-engine fits "
+            "hold their rounds in live Organization objects and cannot "
+            "resume — refit on a compiled engine and save that")
+    why = plan_mismatch(
+        plan, plan_to_manifest(art.plan, model_spec, loss_spec),
+        model_spec, loss_spec)
+    if why is not None:
+        raise ValueError(
+            f"resume_from organization set does not match the artifact's "
+            f"execution plan: {why}")
+    dims_now = group_widths([o.x_train for o in orgs],
+                            [g.indices for g in plan.groups])
+    dims_art = [[int(d) for d in gd] for gd in art.group_dims]
+    if dims_now != dims_art:
+        raise ValueError(
+            f"resume_from slice widths {dims_now} do not match the "
+            f"artifact's fitted widths {dims_art} (per group, in org "
+            f"order)")
+    t0 = int(rs["t_next"])
+    if config.rounds <= t0:
+        raise ValueError(
+            f"resume needs config.rounds > the artifact's {t0} completed "
+            f"rounds (got rounds={config.rounds}); the artifact already "
+            f"serves predictions for every fitted round prefix")
+    if art.config is not None:
+        a = _dc.replace(art.config, rounds=0, engine="auto")
+        b = _dc.replace(config, rounds=0, engine="auto")
+        if a != b:
+            diff = [f.name for f in _dc.fields(GALConfig)
+                    if getattr(a, f.name) != getattr(b, f.name)]
+            raise ValueError(
+                f"resume config mismatch on {diff}: the resumed rounds "
+                f"must draw from the same protocol as the fitted ones "
+                f"(only rounds and engine may change)")
+    if loss_spec(loss) != loss_spec(art.loss):
+        raise ValueError(
+            f"resume loss mismatch: artifact was fit with "
+            f"{loss_spec(art.loss)}, resume called with {loss_spec(loss)}")
+    f = jnp.asarray(rs["f"])
+    if tuple(f.shape) != (int(y.shape[0]), int(y.shape[-1])):
+        raise ValueError(
+            f"resume target shape {tuple(y.shape)} does not match the "
+            f"artifact's ensemble carry {tuple(f.shape)} — resuming needs "
+            f"the original training rows")
+    # cheap data-identity gate: F^0 is a deterministic function of y
+    # (mean/median/prior init), so a same-shape-but-different target —
+    # where the restored carry would silently produce rounds no
+    # uninterrupted fit could — is caught here for any label drift that
+    # moves the init
+    f0_now = np.asarray(loss.init_prediction(y))
+    if not np.allclose(f0_now, np.asarray(art.f0), rtol=1e-6, atol=1e-7):
+        raise ValueError(
+            "resume target y does not look like the data the artifact was "
+            "fit on (loss.init_prediction(y) differs from the artifact's "
+            "F^0) — resuming needs the original training targets")
+    saved_evals = dict(rs.get("f_evals") or {})
+    names_now = sorted((eval_sets or {}).keys())
+    if sorted(saved_evals) != names_now:
+        raise ValueError(
+            f"resume eval_sets {names_now} do not match the artifact's "
+            f"saved eval carries {sorted(saved_evals)}; pass the same "
+            f"eval sets the original fit used")
+    for nm, fe in saved_evals.items():
+        y_e = eval_sets[nm][1]
+        if tuple(jnp.asarray(fe).shape) != (int(y_e.shape[0]),
+                                            int(y.shape[-1])):
+            raise ValueError(
+                f"resume eval set {nm!r} has {int(y_e.shape[0])} rows, the "
+                f"artifact's carry has {int(jnp.asarray(fe).shape[0])}")
+    # fail on metric drift BEFORE the engine runs: the resumed rounds'
+    # history columns must extend the artifact's exactly (the stitcher
+    # re-checks, but by then the whole resumed fit has been paid for)
+    expected = {"train_loss", *_LEDGER_COLS}
+    for nm in (eval_sets or {}):
+        expected.add(f"{nm}_loss")
+        for mname in (metric_map or {}):
+            expected.add(f"{nm}_{mname}")
+    if expected != set(art.history):
+        raise ValueError(
+            f"resume history columns would not match the artifact's "
+            f"(differing: {sorted(expected ^ set(art.history))}); resume "
+            f"with the same metrics/metric_fn the original fit used")
+    return {
+        "t_next": t0,
+        "f": f,
+        "f_evals": {nm: jnp.asarray(v) for nm, v in saved_evals.items()},
+        "key": jnp.asarray(rs["key"]),
+        "active": jnp.asarray(rs["active"]),
+        "state": jax.tree_util.tree_map(jnp.asarray,
+                                        dict(rs.get("state") or {})),
+    }
+
+
+def _stitch_resume(art: GALResult, new: GALResult,
+                   plan: ExecutionPlan) -> GALResult:
+    """Concatenate an artifact's completed rounds with the freshly resumed
+    ones into one seamless GALResult: etas/weights append, history columns
+    extend (ledger columns verbatim, curve columns minus the restored-carry
+    init row), fresh-fit group params concatenate on the round axis, and
+    DMS group params are taken whole from the resumed carry (its stacked
+    head buffer already spans every round)."""
+    if set(art.history) != set(new.history):
+        raise ValueError(
+            f"resumed history columns do not match the artifact's "
+            f"(differing: {sorted(set(new.history) ^ set(art.history))}); "
+            f"resume with the same metrics/metric_fn the original fit "
+            f"used")
+    hist: Dict[str, List[float]] = {}
+    for col, vals in new.history.items():
+        old = list(art.history[col])
+        hist[col] = old + (list(vals) if col in _LEDGER_COLS
+                           else list(vals[1:]))
+    group_params: List[Any] = []
+    for gi, g in enumerate(plan.groups):
+        if g.dms:
+            group_params.append(new.group_params[gi])
+            continue
+        # concatenate leaf-by-leaf in flatten order rather than with a
+        # two-tree tree_map: a disk-loaded artifact holds tuples as lists
+        # (the self-describing npz form), which flatten to the same leaf
+        # sequence but not the same treedef as the fresh fit's params
+        leaves_new, treedef = jax.tree_util.tree_flatten(
+            new.group_params[gi])
+        leaves_old = jax.tree_util.tree_leaves(art.group_params[gi])
+        if len(leaves_old) != len(leaves_new):
+            raise ValueError(
+                f"resumed group {gi} params have {len(leaves_new)} leaves, "
+                f"the artifact's have {len(leaves_old)} — the model "
+                f"implementation changed since the artifact was saved")
+        group_params.append(treedef.unflatten([
+            jnp.concatenate([jnp.asarray(a), jnp.asarray(b)], axis=0)
+            for a, b in zip(leaves_old, leaves_new)]))
+    new.etas = list(art.etas) + list(new.etas)
+    new.weights = ([jnp.asarray(w) for w in art.weights]
+                   + list(new.weights))
+    new.history = hist
+    new.group_params = group_params
+    if plan.n_groups == 1 and not plan.has_dms:
+        new.stacked_params = group_params[0]
+    return new
 
 
 def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
@@ -390,7 +648,7 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
     f_train = jnp.broadcast_to(f0, (n, k))
     alice_loss = lq_loss(config.alice_q)
 
-    result = GALResult(orgs=orgs, loss=loss, f0=f0)
+    result = GALResult(orgs=orgs, loss=loss, f0=f0, config=config)
     hist = result.history
     hist["train_loss"] = [float(loss(y, f_train))]
     f_evals = {}

@@ -325,6 +325,73 @@ def _check_eval_sets(orgs: Sequence[Any],
     return None
 
 
+_GROUP_MANIFEST_FIELDS = ("indices", "org_ids", "model", "local_loss",
+                          "noise_sigma", "dms")
+
+
+def plan_to_manifest(plan: ExecutionPlan, model_spec, loss_spec) -> Dict:
+    """Serialize a plan's group partition for the artifact manifest.
+
+    The codecs are injected (``repro.checkpoint.checkpoint.model_spec`` /
+    ``loss_spec``) so the planner stays free of any persistence-layer
+    imports. The manifest carries everything ``plan_from_manifest`` needs
+    to rebuild a prediction-capable plan, and everything ``plan_mismatch``
+    needs to verify a resume-time org set against the fitted one."""
+    return {
+        "groups": [
+            {"indices": list(g.indices), "org_ids": list(g.org_ids),
+             "model": model_spec(g.model),
+             "local_loss": loss_spec(g.local_loss),
+             "noise_sigma": float(g.noise_sigma), "dms": bool(g.dms)}
+            for g in plan.groups
+        ],
+        "notes": list(plan.notes),
+    }
+
+
+def plan_from_manifest(manifest: Dict, model_from_spec,
+                       loss_from_spec) -> ExecutionPlan:
+    """Inverse of ``plan_to_manifest``: rebuild a compiled ExecutionPlan
+    (no fallback reason — only compiled plans are ever saved) with models
+    and losses re-resolved through the injected codecs."""
+    groups = tuple(
+        OrgGroup(
+            indices=tuple(int(i) for i in gm["indices"]),
+            org_ids=tuple(int(i) for i in gm["org_ids"]),
+            model=model_from_spec(gm["model"]),
+            local_loss=loss_from_spec(gm["local_loss"]),
+            noise_sigma=float(gm["noise_sigma"]),
+            dms=bool(gm["dms"]),
+        )
+        for gm in manifest["groups"]
+    )
+    return ExecutionPlan(groups=groups,
+                         notes=tuple(manifest.get("notes", ())))
+
+
+def plan_mismatch(plan: ExecutionPlan, manifest: Dict, model_spec,
+                  loss_spec) -> Optional[str]:
+    """Compare a freshly planned org set against an artifact's plan
+    manifest; None when they match group for group, else a human-readable
+    reason naming the first divergence. This is the resume-time compat
+    gate: the restored round-scan carry is only meaningful when the new
+    orgs plan into the *identical* partition (same group order, same
+    member indices/ids, same model configs, same loss identities, same
+    noise sigmas, same DMS flags)."""
+    mine = plan_to_manifest(plan, model_spec, loss_spec)["groups"]
+    theirs = manifest["groups"]
+    if len(mine) != len(theirs):
+        return (f"artifact plan has {len(theirs)} group(s), the supplied "
+                f"organizations plan into {len(mine)}")
+    for gi, (a, b) in enumerate(zip(mine, theirs)):
+        for field_ in _GROUP_MANIFEST_FIELDS:
+            if a[field_] != b[field_]:
+                return (f"group {gi} {field_} mismatch: artifact has "
+                        f"{b[field_]!r}, the supplied organizations have "
+                        f"{a[field_]!r}")
+    return None
+
+
 def plan_lm_orgs(orgs: Sequence[Any]) -> ExecutionPlan:
     """The same grouping for LM-scale organizations (``core.gal_lm``):
     groups keyed by (architecture config, local lr). The fused LM path

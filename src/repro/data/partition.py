@@ -130,6 +130,17 @@ def stack_groups(xs: Sequence[jnp.ndarray],
     return stacks, dims, pads
 
 
+def group_widths(xs: Sequence[jnp.ndarray],
+                 index_groups: Sequence[Sequence[int]]) -> List[List[int]]:
+    """Per-group trailing widths of the org slices, in the planner's group
+    order — exactly the ``dims`` that ``stack_groups`` would compute,
+    without building the stacks. The artifact lifecycle uses this as the
+    resume-time geometry gate: a restored round-scan carry is only valid
+    when the re-supplied slices match the fitted widths column for column
+    (same pad targets, same per-org dims)."""
+    return [[int(xs[i].shape[-1]) for i in idx] for idx in index_groups]
+
+
 def unstack_groups(stacks: Sequence[jnp.ndarray],
                    index_groups: Sequence[Sequence[int]],
                    dims: Sequence[Sequence[int]] | None = None

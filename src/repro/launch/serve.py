@@ -17,7 +17,11 @@ Two serving modes:
     latency. ``--dms`` fits Deep Model Sharing organizations (paper
     Sec. 4.2/5: one shared extractor + T stacked heads per org) on the
     grouped engine and prints the model-memory ledger's Tx saving next to
-    the fresh-fit baseline.
+    the fresh-fit baseline. ``--save DIR`` persists the fitted ensemble as
+    a versioned artifact (``repro.checkpoint.save_artifact``) after the
+    fit; ``--load DIR`` skips the fit entirely and serves the artifact —
+    fit once, serve forever: the loaded ensemble's jitted predict path is
+    compiled once and cached across every subsequent request.
 
 Examples (CPU container):
   REPRO_FORCE_DEVICES=8 PYTHONPATH=src python -m repro.launch.serve \
@@ -28,6 +32,10 @@ Examples (CPU container):
       --gal-ensemble --engine shard --rounds 8 --orgs 4 --batch 256
   PYTHONPATH=src python -m repro.launch.serve --gal-ensemble --hetero \
       --rounds 8 --orgs 4 --batch 256
+  PYTHONPATH=src python -m repro.launch.serve --gal-ensemble \
+      --rounds 8 --orgs 4 --save /tmp/gal-artifact          # fit once
+  PYTHONPATH=src python -m repro.launch.serve --gal-ensemble \
+      --orgs 4 --load /tmp/gal-artifact                     # serve forever
 
 NOTE: the ``REPRO_FORCE_DEVICES`` shim below must run before the first jax
 operation in the process (see repro/utils/force_devices.py), so it sits
@@ -47,7 +55,10 @@ def gal_ensemble_serve(args) -> None:
     """Serve the stacked-round GAL ensemble; print ms/request for the fused
     vmap path next to the legacy per-(round, org) loop. With
     ``--engine shard`` the fit runs org-sharded across devices and the
-    per-round communication ledger is printed."""
+    per-round communication ledger is printed. ``--save`` persists the
+    fitted ensemble as an artifact after the (cold) fit; ``--load`` serves
+    a saved artifact with NO fit at all — the warm-start path a production
+    deployment restarts on."""
     import numpy as np
     from repro.core import gal
     from repro.core.gal import GALConfig
@@ -61,33 +72,79 @@ def gal_ensemble_serve(args) -> None:
 
     rng_np = np.random.default_rng(0)
     key = jax.random.PRNGKey(0)
-    ds = make_regression(rng_np, n=512, d=4 * args.orgs)
+
+    req_widths = None
+    if args.load:
+        from repro.checkpoint import load_artifact
+        t0 = time.time()
+        res = load_artifact(args.load)
+        dt_load = time.time() - t0
+        if res.plan is not None and res.plan.n_orgs != args.orgs:
+            # the artifact knows its own org count — no need to re-type it
+            print(f"gal-ensemble: the artifact was fit on "
+                  f"{res.plan.n_orgs} organizations; serving those "
+                  f"(--orgs {args.orgs} ignored)")
+            args.orgs = res.plan.n_orgs
+        if any(p is None for p in res.group_pads):
+            raise SystemExit(
+                "--load in this demo CLI serves tabular artifacts only "
+                "(this one was fit on higher-rank slices); load it with "
+                "repro.checkpoint.load_artifact and call predict directly")
+        # request slices must reproduce the artifact's per-org widths, in
+        # org order — the geometry lives in the plan + group_dims
+        req_widths = [0] * res.plan.n_orgs
+        for gi, g in enumerate(res.plan.groups):
+            for j, i in enumerate(g.indices):
+                req_widths[i] = int(res.group_dims[gi][j])
+        print(f"gal-ensemble WARM start: loaded {args.load} in "
+              f"{dt_load * 1e3:.0f} ms (engine={res.engine} "
+              f"rounds={res.rounds}, no refit — the artifact outlives "
+              f"the fitting process; --rounds/--engine describe fits and "
+              f"are ignored here)")
+
+    d_total = 4 * args.orgs if req_widths is None else sum(req_widths)
+    ds = make_regression(rng_np, n=512, d=d_total)
     train, test = train_test_split(ds, rng_np)
-    xs = split_features(train.x, args.orgs)
-    engine = args.engine
-    dms = False
-    if args.dms:
-        # Deep Model Sharing (paper Sec. 4.2/5): one shared extractor + T
-        # stacked heads per org, fused by the grouped engine's state carry
-        models, dms = MLP((16,), epochs=20), True
-        if engine in ("scan", "shard"):
-            engine = "grouped"  # the DMS carry is grouped-engine territory
-    elif args.hetero:
-        # model autonomy (paper Sec. 4.2): alternate GB / SVM stand-ins so
-        # the planner fuses a mixed-model set into one compiled round loop
-        models = [StumpBoost(n_stumps=20) if i % 2 == 0 else KernelRidge()
-                  for i in range(args.orgs)]
-        if engine in ("scan", "shard"):
-            engine = "grouped"  # the single-group engines cannot mix models
-    else:
-        models = Linear()
-    res = gal.fit(key, make_orgs(xs, models, dms=dms), train.y,
-                  get_loss("mse"), GALConfig(rounds=args.rounds,
-                                             engine=engine))
+
+    if not args.load:
+        xs = split_features(train.x, args.orgs)
+        engine = args.engine
+        dms = False
+        if args.dms:
+            # Deep Model Sharing (paper Sec. 4.2/5): one shared extractor +
+            # T stacked heads per org, fused by the grouped engine's carry
+            models, dms = MLP((16,), epochs=20), True
+            if engine in ("scan", "shard"):
+                engine = "grouped"  # the DMS carry is grouped territory
+        elif args.hetero:
+            # model autonomy (paper Sec. 4.2): alternate GB / SVM stand-ins
+            # so the planner fuses a mixed-model set into one compiled loop
+            models = [StumpBoost(n_stumps=20) if i % 2 == 0
+                      else KernelRidge() for i in range(args.orgs)]
+            if engine in ("scan", "shard"):
+                engine = "grouped"  # single-group engines cannot mix models
+        else:
+            models = Linear()
+        t0 = time.time()
+        res = gal.fit(key, make_orgs(xs, models, dms=dms), train.y,
+                      get_loss("mse"), GALConfig(rounds=args.rounds,
+                                                 engine=engine))
+        dt_fit = time.time() - t0
+        print(f"gal-ensemble COLD start: fit {args.rounds} rounds in "
+              f"{dt_fit:.2f} s (engine={res.engine})")
+        if args.save:
+            from repro.checkpoint import save_artifact
+            t0 = time.time()
+            save_artifact(res, args.save)
+            print(f"gal-ensemble artifact saved to {args.save} in "
+                  f"{(time.time() - t0) * 1e3:.0f} ms — serve it with "
+                  f"--load {args.save} (no refit) or extend it with "
+                  f"gal.fit(..., resume_from={args.save!r})")
     if "model_memories" in res.history:
         from repro.core.protocol_sim import gal_model_memories
         fresh = gal_model_memories(res.rounds, [False] * args.orgs)
         live = res.history["model_memories"][-1]
+        dms = res.plan.has_dms if res.plan is not None else args.dms
         print(f"gal-ensemble model memories ({'DMS' if dms else 'fresh'}): "
               f"{live} live copies after {res.rounds} rounds "
               f"(fresh-fit baseline {fresh[-1]}; "
@@ -104,9 +161,13 @@ def gal_ensemble_serve(args) -> None:
               f"gathered={sum(res.history['comm_gather_bytes']):.0f} B "
               f"over {res.rounds} rounds x {len(jax.devices())} devices")
 
+    from repro.data.partition import split_channels
+    slices = (split_channels(test.x, req_widths) if req_widths is not None
+              else split_features(test.x, args.orgs))
     xs_req = [jnp.tile(x, (max(1, args.batch // x.shape[0]) + 1, 1)
-                       )[:args.batch] for x in split_features(test.x,
-                                                              args.orgs)]
+                       )[:args.batch] for x in slices]
+    # ONE jit compilation, cached across every subsequent request — for a
+    # loaded artifact this is the entire warm-up cost of the deployment
     serve_fast = jax.jit(lambda xq: res.predict(xq))
     jax.block_until_ready(serve_fast(xs_req))            # compile
     t0 = time.time()
@@ -114,6 +175,15 @@ def gal_ensemble_serve(args) -> None:
         out = serve_fast(xs_req)
     jax.block_until_ready(out)
     dt_fast = (time.time() - t0) / args.steps
+
+    if args.load:
+        # a loaded artifact has no live Organizations: the legacy
+        # per-(round, org) loop does not apply — report the served path
+        print(f"gal-ensemble orgs={args.orgs} rounds={res.rounds} "
+              f"batch={args.batch}: stacked={dt_fast * 1e3:.2f} ms/req "
+              f"(warm-loaded artifact, jitted predict cached across "
+              f"requests)")
+        return
 
     res.unpack_to_orgs()                                  # legacy loop path
     # per-round params were fit at each GROUP's pad width: pad request
@@ -165,7 +235,25 @@ def main() -> None:
                          "(one shared extractor + stacked per-round heads) "
                          "on the grouped engine; prints the model-memory "
                          "ledger's Tx saving")
+    ap.add_argument("--save", default=None, metavar="DIR",
+                    help="--gal-ensemble: persist the fitted ensemble as a "
+                         "versioned artifact directory after the fit "
+                         "(repro.checkpoint.save_artifact)")
+    ap.add_argument("--load", default=None, metavar="DIR",
+                    help="--gal-ensemble: SKIP the fit and serve a saved "
+                         "artifact (fit once, serve forever); the jitted "
+                         "predict path is compiled once and cached across "
+                         "requests")
     args = ap.parse_args()
+
+    if args.load:
+        conflicts = [flag for flag, on in (("--save", args.save),
+                                           ("--hetero", args.hetero),
+                                           ("--dms", args.dms)) if on]
+        if conflicts:
+            ap.error(f"--load serves an already-fitted artifact; "
+                     f"{'/'.join(conflicts)} choose fit-time behavior — "
+                     f"drop them (or drop --load to fit)")
 
     if args.gal_ensemble:
         gal_ensemble_serve(args)

@@ -1,0 +1,423 @@
+"""The GAL artifact lifecycle: fit once, serve forever, resume anywhere.
+
+Three contracts pinned here, per engine x scenario:
+
+  * **save -> load -> predict parity**: ``load_artifact(save_artifact(r))``
+    predicts bitwise-identically to the in-memory result at EVERY round
+    prefix on single-host placements (scan / grouped); mesh-sharded
+    results (shard, grouped-over-mesh) are compared to float tolerance —
+    the in-memory result intentionally keeps its params sharded, so its
+    predict runs GSPMD-partitioned reductions the replicated loaded copy
+    does not.
+  * **resume conformance**: a fit interrupted at round t0 and resumed to T
+    reproduces the uninterrupted T-round fit draw for draw — etas,
+    assistance weights, and every history column bitwise, both when
+    resuming from the in-memory result and from the on-disk artifact.
+  * **manifest compat**: every mismatch an artifact can hit at load or
+    resume time (schema version, plan shape, model config, config fields,
+    losses, eval sets, round cursor) raises with the specific reason.
+"""
+import json
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import (ARTIFACT_SCHEMA, load_artifact, save_artifact)
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.launch.mesh import org_mesh_eligible
+from repro.models.zoo import KernelRidge, Linear, MLP, StumpBoost
+
+M = 4
+ROUNDS = 4
+T_CUT = 2
+
+
+def _pseudo_huber(r, f):
+    return jnp.mean(jnp.sqrt(1.0 + jnp.square(r - f)) - 1.0)
+
+
+def _data():
+    rng_np = np.random.default_rng(3)
+    ds = make_regression(rng_np, n=120, d=12)
+    tr, te = train_test_split(ds, rng_np)
+    return (split_features(tr.x, M), tr.y,
+            split_features(te.x, M), te.y)
+
+
+SCENARIOS = {
+    "homogeneous": dict(
+        orgs=lambda xs: make_orgs(xs, Linear()),
+        engines=("scan", "shard")),
+    "hetero": dict(
+        orgs=lambda xs: make_orgs(
+            xs, [StumpBoost(n_stumps=8) if i % 2 == 0 else KernelRidge()
+                 for i in range(M)]),
+        engines=("grouped",)),
+    "noisy": dict(
+        orgs=lambda xs: make_orgs(xs, Linear(),
+                                  noise_sigmas=[0.0, 1.0, 0.0, 1.0]),
+        engines=("grouped",)),
+    "dms": dict(
+        orgs=lambda xs: make_orgs(xs, MLP((8,), epochs=5), dms=True),
+        engines=("grouped",)),
+}
+
+_CELLS = [(s, e) for s, spec in SCENARIOS.items() for e in spec["engines"]]
+
+
+def _skip_without_mesh(engine):
+    if engine == "shard" and not org_mesh_eligible(M):
+        pytest.skip(f"no org mesh for {M} orgs (run under "
+                    f"REPRO_FORCE_DEVICES={M})")
+
+
+def _fit(scenario, engine, key, rounds=ROUNDS, **extra):
+    xs, y, xs_te, y_te = _data()
+    orgs = SCENARIOS[scenario]["orgs"](xs)
+    return gal.fit(key, orgs, y, get_loss("mse"),
+                   GALConfig(rounds=rounds, engine=engine),
+                   eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                   **extra)
+
+
+def _assert_predict_parity(res_a, res_b, xs_te, mesh_placed):
+    for t in range(res_a.rounds + 1):
+        a = np.asarray(res_a.predict(xs_te, rounds=t))
+        b = np.asarray(res_b.predict(xs_te, rounds=t))
+        if mesh_placed:
+            np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6,
+                                       err_msg=f"rounds={t}")
+        else:
+            np.testing.assert_array_equal(a, b, err_msg=f"rounds={t}")
+
+
+# --------------------------------------------------------------- save/load
+
+@pytest.mark.parametrize("scenario,engine", _CELLS,
+                         ids=[f"{s}-{e}" for s, e in _CELLS])
+def test_save_load_predict_parity(tmp_path, key, scenario, engine):
+    _skip_without_mesh(engine)
+    res = _fit(scenario, engine, key)
+    art = load_artifact(save_artifact(res, tmp_path / "art"))
+    xs, _, xs_te, _ = _data()
+    assert art.engine == res.engine
+    assert art.rounds == res.rounds
+    assert art.plan.describe() == res.plan.describe()
+    assert art.group_pads == res.group_pads
+    np.testing.assert_array_equal(np.asarray(art.f0), np.asarray(res.f0))
+    np.testing.assert_array_equal(res.etas, art.etas)
+    assert set(art.history) == set(res.history)
+    for col in res.history:
+        np.testing.assert_allclose(art.history[col], res.history[col],
+                                   rtol=0, atol=0, err_msg=col)
+        if col.startswith("comm_") or col == "model_memories":
+            assert all(isinstance(v, int) for v in art.history[col]), col
+    mesh_placed = res.engine == "shard" or res.mesh_devices > 0
+    _assert_predict_parity(res, art, xs_te, mesh_placed)
+    # the training slices replay too (the Fig. 4 protocol reads them)
+    _assert_predict_parity(res, art, xs, mesh_placed)
+
+
+def test_manifest_is_versioned_and_self_describing(tmp_path, key):
+    res = _fit("homogeneous", "scan", key)
+    path = save_artifact(res, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    assert man["schema"] == ARTIFACT_SCHEMA
+    assert man["t_next"] == ROUNDS and man["rounds"] == ROUNDS
+    assert man["n_orgs"] == M and man["eval_names"] == ["test"]
+    assert len(man["plan"]["groups"]) == res.plan.n_groups
+    g0 = man["plan"]["groups"][0]
+    assert g0["model"]["kind"] == "zoo" and g0["model"]["name"] == "linear"
+    assert g0["local_loss"] == {"kind": "lq", "q": 2.0}
+    assert man["config"]["rounds"] == ROUNDS
+
+
+def test_loaded_artifact_has_no_live_orgs(tmp_path, key):
+    res = _fit("homogeneous", "scan", key)
+    art = load_artifact(save_artifact(res, tmp_path / "art"))
+    assert art.orgs == []
+    with pytest.raises(ValueError, match="no Organizations attached"):
+        art.unpack_to_orgs()
+    with pytest.raises(ValueError, match="no Organizations attached"):
+        art.predict_legacy([jnp.zeros((2, 3))] * M)
+
+
+def test_python_result_cannot_be_saved(tmp_path, key):
+    xs, y, _, _ = _data()
+
+    class NotScanSafe:
+        def fit(self, rng, x, r, loss):
+            return {"w": jnp.zeros((x.shape[-1], r.shape[-1]))}
+
+        def apply(self, params, x):
+            return x @ params["w"]
+
+        def init(self, rng, x, k):
+            return {"w": jnp.zeros((x.shape[-1], k))}
+
+    res = gal.fit(key, make_orgs(xs, NotScanSafe()), y, get_loss("mse"),
+                  GALConfig(rounds=1))
+    assert res.engine == "python"
+    with pytest.raises(ValueError, match="compiled-engine"):
+        save_artifact(res, tmp_path / "art")
+
+
+def test_custom_loss_artifact_requires_resolver(tmp_path, key):
+    xs, y, xs_te, _ = _data()
+    orgs = lambda: make_orgs(xs, Linear(epochs=10),             # noqa: E731
+                             local_losses=_pseudo_huber)
+    res = gal.fit(key, orgs(), y, get_loss("mse"),
+                  GALConfig(rounds=2, engine="grouped"))
+    path = save_artifact(res, tmp_path / "art")
+    with pytest.raises(ValueError, match="_pseudo_huber"):
+        load_artifact(path)
+    art = load_artifact(path, losses={"_pseudo_huber": _pseudo_huber})
+    np.testing.assert_array_equal(np.asarray(res.predict(xs_te)),
+                                  np.asarray(art.predict(xs_te)))
+
+
+def test_custom_loss_resume_by_path(tmp_path, key):
+    """Resuming FROM A PATH with custom (name-only) losses must work
+    without explicit resolver maps: gal.fit resolves the artifact's names
+    against the org set being resumed."""
+    xs, y, _, _ = _data()
+    orgs = lambda: make_orgs(xs, Linear(epochs=10),             # noqa: E731
+                             local_losses=_pseudo_huber)
+    cfg = dict(engine="grouped")
+    one_shot = gal.fit(key, orgs(), y, get_loss("mse"),
+                       GALConfig(rounds=ROUNDS, **cfg))
+    part = gal.fit(key, orgs(), y, get_loss("mse"),
+                   GALConfig(rounds=T_CUT, **cfg))
+    path = save_artifact(part, tmp_path / "part")
+    resumed = gal.fit(key, orgs(), y, get_loss("mse"),
+                      GALConfig(rounds=ROUNDS, **cfg),
+                      resume_from=str(path))
+    np.testing.assert_array_equal(one_shot.etas, resumed.etas)
+
+
+class _TupleParamRidge:
+    """A custom scan-safe model whose params pytree contains a TUPLE —
+    the self-describing npz form stores it as a list, so the resume
+    stitcher must concatenate by leaf order, not by two-tree treedef."""
+    scan_safe = True
+    pad_invariant = True
+
+    def init(self, rng, x_example, k_out):
+        return {"wb": (jnp.zeros((x_example.shape[-1], k_out)),
+                       jnp.zeros((k_out,)))}
+
+    def fit(self, rng, x, r, local_loss):
+        n, d = x.shape
+        xb = jnp.concatenate([x, jnp.ones((n, 1))], axis=1)
+        sol = jnp.linalg.solve(xb.T @ xb + 1e-3 * jnp.eye(d + 1), xb.T @ r)
+        return {"wb": (sol[:-1], sol[-1])}
+
+    def apply(self, params, x):
+        w, b = params["wb"]
+        return x @ w + b
+
+
+def test_tuple_param_custom_model_resumes_from_disk(tmp_path, key):
+    xs, y, _, _ = _data()
+    model = _TupleParamRidge()
+    mk = lambda: make_orgs(xs, model)                           # noqa: E731
+    cfg = dict(engine="grouped")
+    one_shot = gal.fit(key, mk(), y, get_loss("mse"),
+                       GALConfig(rounds=ROUNDS, **cfg))
+    part = gal.fit(key, mk(), y, get_loss("mse"),
+                   GALConfig(rounds=T_CUT, **cfg))
+    path = save_artifact(part, tmp_path / "part")
+    resumed = gal.fit(key, mk(), y, get_loss("mse"),
+                      GALConfig(rounds=ROUNDS, **cfg),
+                      resume_from=str(path))
+    np.testing.assert_array_equal(one_shot.etas, resumed.etas)
+
+
+def test_load_rejects_wrong_schema_and_non_artifact(tmp_path, key):
+    res = _fit("homogeneous", "scan", key)
+    path = save_artifact(res, tmp_path / "art")
+    man = json.loads((path / "manifest.json").read_text())
+    man["schema"] = "gal-artifact/v999"
+    (path / "manifest.json").write_text(json.dumps(man))
+    with pytest.raises(ValueError, match="unsupported artifact schema"):
+        load_artifact(path)
+    with pytest.raises(ValueError, match="not a GAL artifact"):
+        load_artifact(tmp_path / "nowhere")
+
+
+# ------------------------------------------------------------------ resume
+
+@pytest.mark.parametrize("scenario,engine", _CELLS,
+                         ids=[f"{s}-{e}" for s, e in _CELLS])
+def test_resume_matches_one_shot(tmp_path, key, scenario, engine):
+    """Fit T_CUT rounds, save, resume to ROUNDS (from disk AND in memory):
+    etas, weights, and EVERY history column must equal the uninterrupted
+    ROUNDS-round fit bitwise — the resumed carry restores the exact
+    round-scan state, and the RNG chain continues where it left off."""
+    _skip_without_mesh(engine)
+    one_shot = _fit(scenario, engine, key)
+    part = _fit(scenario, engine, key, rounds=T_CUT)
+    path = save_artifact(part, tmp_path / "part")
+
+    for label, src in (("disk", str(path)), ("memory", part)):
+        resumed = _fit(scenario, engine, key, resume_from=src)
+        assert resumed.rounds == one_shot.rounds, label
+        np.testing.assert_array_equal(one_shot.etas, resumed.etas,
+                                      err_msg=label)
+        np.testing.assert_array_equal(np.stack(one_shot.weights),
+                                      np.stack(resumed.weights),
+                                      err_msg=label)
+        assert set(resumed.history) == set(one_shot.history), label
+        for col in one_shot.history:
+            np.testing.assert_allclose(resumed.history[col],
+                                       one_shot.history[col],
+                                       rtol=0, atol=0,
+                                       err_msg=f"{label}/{col}")
+        xs, _, xs_te, _ = _data()
+        mesh_placed = one_shot.engine == "shard" or one_shot.mesh_devices > 0
+        _assert_predict_parity(one_shot, resumed, xs_te, mesh_placed)
+        # the resumed result is itself resumable and saveable
+        assert resumed.resume_state is not None
+        assert int(resumed.resume_state["t_next"]) == ROUNDS
+
+
+def test_resumed_artifact_round_trips(tmp_path, key):
+    """resume -> save -> load -> predict: the stitched result is a
+    first-class artifact (params concatenated across the cut)."""
+    one_shot = _fit("homogeneous", "scan", key)
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    resumed = _fit("homogeneous", "scan", key, resume_from=part)
+    art = load_artifact(save_artifact(resumed, tmp_path / "art"))
+    _, _, xs_te, _ = _data()
+    _assert_predict_parity(one_shot, art, xs_te, mesh_placed=False)
+
+
+def test_early_stopped_artifact_resumes_to_noop(key, tmp_path):
+    """An artifact whose fit already crossed eta_stop_threshold appends
+    nothing on resume — exactly like the longer one-shot fit."""
+    xs, y, xs_te, y_te = _data()
+    cfg = dict(eta_stop_threshold=10.0, engine="scan")
+    one_shot = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                       GALConfig(rounds=6, **cfg),
+                       eval_sets={"test": (xs_te, y_te)})
+    part = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=3, **cfg),
+                   eval_sets={"test": (xs_te, y_te)})
+    assert part.rounds < 3        # the threshold bites immediately
+    resumed = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                      GALConfig(rounds=6, **cfg),
+                      eval_sets={"test": (xs_te, y_te)}, resume_from=part)
+    np.testing.assert_array_equal(one_shot.etas, resumed.etas)
+    for col in one_shot.history:
+        np.testing.assert_allclose(resumed.history[col],
+                                   one_shot.history[col], rtol=0, atol=0,
+                                   err_msg=col)
+
+
+# ------------------------------------------------------- mismatch guards
+
+def test_resume_rejects_plan_mismatch(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    wrong = make_orgs(xs, [StumpBoost(n_stumps=8) if i % 2 == 0
+                           else KernelRidge() for i in range(M)])
+    with pytest.raises(ValueError, match="does not match the artifact"):
+        gal.fit(key, wrong, y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="grouped"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_model_config_drift(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    drifted = make_orgs(xs, Linear(ridge=0.5))
+    with pytest.raises(ValueError, match="model mismatch"):
+        gal.fit(key, drifted, y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_config_and_loss_drift(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="config mismatch.*eta_method"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan",
+                          eta_method="golden"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+    with pytest.raises(ValueError, match="loss mismatch"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mae"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_rounds_not_beyond_cursor(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="rounds >"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=T_CUT, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_different_training_targets(key):
+    """Same-shape-but-different y must be caught (F^0 is a deterministic
+    function of y): a restored carry on drifted data would silently
+    produce rounds no uninterrupted fit could."""
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="does not look like the data"):
+        gal.fit(key, make_orgs(xs, Linear()), y + 1.0, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_eval_set_mismatch(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="eval"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"holdout": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+
+
+def test_resume_rejects_python_engine_and_python_results(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="compiled engine"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="python"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=part)
+    res_py = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                     GALConfig(rounds=T_CUT, engine="python"),
+                     eval_sets={"test": (xs_te, y_te)}, metrics=("mad",))
+    with pytest.raises(ValueError, match="no resume state"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                resume_from=res_py)
+
+
+def test_resume_rejects_metric_column_drift(key):
+    part = _fit("homogeneous", "scan", key, rounds=T_CUT)
+    xs, y, xs_te, y_te = _data()
+    with pytest.raises(ValueError, match="history columns"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=ROUNDS, engine="scan"),
+                eval_sets={"test": (xs_te, y_te)}, metrics=("mad", "auroc"),
+                resume_from=part)

@@ -1,4 +1,11 @@
-"""Checkpoint round-trips + GAL round resumability."""
+"""Checkpoint round-trips + GAL round resumability.
+
+Covers both pytree layers: the ``like``-templated exact round-trip
+(treedef + dtypes authoritative, bf16 leaves via uint16 views) and the
+self-describing load (``like=None``) the artifact reader uses — structure
+rebuilt from the flattened key paths alone, which must hold for the
+engines' stacked group-param pytrees (nested dicts, lists of layer dicts,
+mixed dtypes including bf16)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -20,6 +27,76 @@ def test_pytree_roundtrip(tmp_path, key):
         assert a.dtype == b.dtype
         np.testing.assert_allclose(np.asarray(a, np.float32),
                                    np.asarray(b, np.float32))
+
+
+def _stacked_group_params(key):
+    """A realistic compiled-engine group-params pytree: per-round stacked
+    leaves (T, M_g, ...) in nested dicts/lists, one bf16 leaf (the dtype
+    npz cannot hold natively) and one int leaf (stump feature indices)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "g0": {"w": jax.random.normal(k1, (3, 2, 5, 4)),
+               "b": jnp.zeros((3, 2, 4), jnp.bfloat16)},
+        "g1": {"layers": [{"w": jax.random.normal(k2, (3, 2, 4, 8))},
+                          {"w": jnp.ones((3, 2, 8, 1))}],
+               "feat": jnp.arange(6, dtype=jnp.int32).reshape(3, 2)},
+    }
+
+
+def test_stacked_group_params_roundtrip_with_treedef(tmp_path, key):
+    tree = _stacked_group_params(key)
+    save_pytree(tmp_path / "gp.npz", tree)
+    loaded = load_pytree(tmp_path / "gp.npz", tree)
+    assert (jax.tree_util.tree_structure(loaded)
+            == jax.tree_util.tree_structure(tree))
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_self_describing_load_rebuilds_structure(tmp_path, key):
+    """load_pytree(path) with NO template — the artifact reader's path —
+    must rebuild nested dicts and lists (and bf16 dtypes) from the
+    flattened key paths alone, bitwise."""
+    tree = _stacked_group_params(key)
+    save_pytree(tmp_path / "gp.npz", tree)
+    loaded = load_pytree(tmp_path / "gp.npz")
+    assert set(loaded) == {"g0", "g1"}
+    assert isinstance(loaded["g1"]["layers"], list)
+    assert len(loaded["g1"]["layers"]) == 2
+    assert loaded["g0"]["b"].dtype == jnp.bfloat16
+    assert loaded["g1"]["feat"].dtype == jnp.int32
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_self_describing_load_keeps_empty_containers(tmp_path, key):
+    """Zero-leaf nodes (empty dict/list, None) must survive the
+    template-free load — silently dropping them would shift list indices
+    and lose dict keys (e.g. an empty DMS state in the resume carry)."""
+    tree = {"mid": [jnp.arange(2), {}, jnp.ones((2,))],
+            "state": {}, "maybe": None, "tail": [jnp.zeros((1,))]}
+    save_pytree(tmp_path / "e.npz", tree)
+    loaded = load_pytree(tmp_path / "e.npz")
+    assert loaded["state"] == {} and loaded["maybe"] is None
+    assert len(loaded["mid"]) == 3 and loaded["mid"][1] == {}
+    np.testing.assert_array_equal(np.asarray(loaded["mid"][2]),
+                                  np.ones((2,)))
+    save_pytree(tmp_path / "root.npz", {})
+    assert load_pytree(tmp_path / "root.npz") == {}
+
+
+def test_self_describing_load_bare_leaf(tmp_path, key):
+    x = jax.random.normal(key, (4, 3))
+    save_pytree(tmp_path / "leaf.npz", x)
+    np.testing.assert_array_equal(np.asarray(load_pytree(tmp_path
+                                                         / "leaf.npz")),
+                                  np.asarray(x))
 
 
 def test_gal_round_checkpoint_resume(tmp_path, key):

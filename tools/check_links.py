@@ -1,0 +1,55 @@
+#!/usr/bin/env python
+"""Check that every relative markdown link in README.md and docs/*.md
+resolves to a real file (anchors and external URLs are skipped; anchors
+on relative links are stripped before the existence check).
+
+Run from the repo root: ``python tools/check_links.py``. Exits non-zero
+listing every dangling link — the CI docs job gates on it so the
+serving/api/algorithm cross-links can never silently rot.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check(root: Path) -> list[str]:
+    errors = []
+    files = [root / "README.md", *sorted((root / "docs").glob("*.md"))]
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: file listed for checking does not exist")
+            continue
+        for lineno, line in enumerate(md.read_text().splitlines(), 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(("http://", "https://", "mailto:",
+                                      "#")):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = (md.parent / rel).resolve()
+                if not resolved.exists():
+                    errors.append(
+                        f"{md.relative_to(root)}:{lineno}: dangling link "
+                        f"-> {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parent.parent
+    errors = check(root)
+    if errors:
+        print("\n".join(errors))
+        print(f"{len(errors)} dangling link(s)")
+        return 1
+    n_files = 1 + len(list((root / "docs").glob("*.md")))
+    print(f"all relative links resolve across {n_files} markdown files")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
