@@ -209,6 +209,94 @@ def gal_artifact_benchmark(rounds: int = 8, m: int = 4, n: int = 512,
                           "us_per_call": t_req})
 
 
+def gal_membership_benchmark(rounds: int = 8, m: int = 4, n: int = 512,
+                             d: int = 16,
+                             json_rows: list | None = None) -> None:
+    """Dynamic-membership cost rows for the BENCH artifact:
+
+    * ``dropout_round_overhead`` — steady-state (post-compile) fit time
+      with a dropout schedule vs the unmasked fit. Membership rides the
+      scan inputs as a boolean row, so the masked program should cost
+      within a few percent of the unmasked one; the ratio is recorded as
+      DATA (CI tracks drift, the 5%% expectation is advisory here).
+    * ``contrib_loo_refit`` — one leave-one-out counterfactual via resume
+      from the round-``t0`` carry vs the same counterfactual fit from
+      scratch: the speedup the contributivity estimators
+      (``repro.core.contrib``) bank on."""
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import Linear
+
+    rng_np = np.random.default_rng(0)
+    key = jax.random.PRNGKey(0)
+    ds = make_regression(rng_np, n=n, d=d)
+    train, _ = train_test_split(ds, rng_np)
+    xs = split_features(train.x, m)
+    loss = get_loss("mse")
+    cfg = GALConfig(rounds=rounds, engine="scan")
+    # the overhead row runs LONG (8x) so the scanned rounds — the thing
+    # membership actually touches — are a visible fraction of the one-shot
+    # fit; at toy sizes trace+compile dominates and is schedule-independent
+    r_ov = 8 * rounds
+    cfg_ov = GALConfig(rounds=r_ov, engine="scan")
+    sched = np.ones((r_ov, m), bool)
+    sched[1::2, m - 1] = False          # last org drops every other round
+
+    def fit_once(membership=None, resume=None, config=cfg):
+        return gal.fit(key, make_orgs(xs, Linear()), train.y, loss, config,
+                       membership=membership, resume_from=resume)
+
+    def best_of(fn, iters: int = 3) -> float:
+        # each gal.fit call re-traces, so min-of-iters is the stable
+        # number (first calls eat allocator/caching warm-up noise)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            fn()
+            ts.append(time.perf_counter() - t0)
+        return min(ts)
+
+    fit_once()                           # process warm-up
+    t_plain = best_of(lambda: fit_once(config=cfg_ov))
+    t_masked = best_of(lambda: fit_once(membership=sched, config=cfg_ov))
+    ratio = t_masked / max(t_plain, 1e-12)
+    print(f"gal_fit_dropout_overhead_R{r_ov}_M{m},"
+          f"{t_masked / r_ov * 1e6:.1f},masked_over_unmasked={ratio:.3f}")
+    if json_rows is not None:
+        json_rows.append({
+            "scenario": "dropout_round_overhead", "engine": "scan",
+            "rounds": r_ov, "orgs": m, "n": n, "d": d,
+            "seconds_unmasked": t_plain, "seconds_masked": t_masked,
+            "masked_over_unmasked": ratio, "within_5pct": ratio <= 1.05,
+        })
+
+    # LOO counterfactual: resume from the t0 carry vs fit from scratch
+    t0_cut = rounds // 2
+    base = gal.fit(key, make_orgs(xs, Linear()), train.y, loss,
+                   GALConfig(rounds=t0_cut, engine="scan"))
+    loo_sched = np.ones((rounds, m), bool)
+    loo_sched[t0_cut:, 0] = False       # org 0 leaves at the cut
+
+    t_resume = best_of(lambda: fit_once(membership=loo_sched, resume=base))
+    t_scratch = best_of(lambda: fit_once(membership=loo_sched))
+    speedup = t_scratch / max(t_resume, 1e-12)
+    print(f"gal_contrib_loo_refit_R{rounds}_M{m},"
+          f"{t_resume * 1e6:.1f},resume_speedup={speedup:.2f}x"
+          f";rounds_executed={rounds - t0_cut}_vs_{rounds}")
+    if json_rows is not None:
+        json_rows.append({
+            "scenario": "contrib_loo_refit", "engine": "scan",
+            "rounds": rounds, "orgs": m, "t0": t0_cut,
+            "rounds_executed_resume": rounds - t0_cut,
+            "seconds_resume": t_resume, "seconds_scratch": t_scratch,
+            "resume_speedup": speedup,
+        })
+
+
 _SHARD_BENCH_SNIPPET = r"""
 import time
 from repro.utils.force_devices import apply_force_devices
@@ -317,18 +405,60 @@ def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
         print(f"{a},{s},{m},{tc:.4f},{tm:.4f},{tl:.4f},{dom},{u},{pk:.2f}")
 
 
-def write_bench_json(path: str, rows: list) -> None:
-    """Emit the machine-readable benchmark artifact (BENCH_PR5.json):
-    rounds/sec per engine and scenario — including the heterogeneous
-    GB–SVM-mix row — so CI tracks the perf trajectory across PRs."""
-    payload = {
-        "schema": "gal-bench/v1",
+def _git_sha() -> str | None:
+    """Best-effort commit SHA of the repo the benchmark ran from."""
+    import subprocess
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"],
+                             capture_output=True, text=True, timeout=10,
+                             cwd=Path(__file__).resolve().parent)
+        return out.stdout.strip() if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
+def bench_provenance() -> dict:
+    """The run's provenance header: enough to tell two BENCH_*.json apart
+    without trusting the filename — device layout, library versions, the
+    exact commit. Stamped into every artifact by ``write_bench_json``."""
+    return {
         "device_count": jax.device_count(),
         "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "numpy_version": np.__version__,
+        "git_sha": _git_sha(),
+    }
+
+
+def write_bench_json(path: str, rows: list) -> None:
+    """Emit the machine-readable benchmark artifact (the BENCH_PR<N>.json
+    CI artifact): rounds/sec per engine and scenario — including the
+    heterogeneous GB–SVM-mix, membership-overhead and contributivity
+    rows — with a provenance header, so CI tracks the perf trajectory
+    across PRs and every artifact says which commit/devices produced it."""
+    payload = {
+        "schema": "gal-bench/v1",
+        **bench_provenance(),
         "rows": rows,
     }
     Path(path).write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {path} ({len(rows)} rows)")
+
+
+def load_bench_json(path: str) -> dict:
+    """Load a BENCH_*.json artifact from ANY PR generation, backfilling
+    provenance fields older writers never stamped (``jax_version`` /
+    ``numpy_version`` / ``git_sha`` arrive as None on PR4/PR5-era files)
+    so downstream comparisons can treat every artifact uniformly."""
+    payload = json.loads(Path(path).read_text())
+    if payload.get("schema") != "gal-bench/v1":
+        raise ValueError(f"{path}: not a gal-bench/v1 artifact "
+                         f"(schema={payload.get('schema')!r})")
+    for field in ("device_count", "backend", "jax_version", "numpy_version",
+                  "git_sha"):
+        payload.setdefault(field, None)
+    payload.setdefault("rows", [])
+    return payload
 
 
 def main() -> None:
@@ -338,7 +468,8 @@ def main() -> None:
     ap.add_argument("--skip-tables", action="store_true")
     ap.add_argument("--json-out", default=None, metavar="PATH",
                     help="write the engine-benchmark rows as machine-"
-                         "readable JSON (the BENCH_PR5.json CI artifact)")
+                         "readable JSON with a provenance header (the "
+                         "BENCH_PR<N>.json CI artifact)")
     ap.add_argument("--engines-only", action="store_true",
                     help="run only the GAL engine benchmarks (the fast "
                          "CI-artifact path): no tables, no micro, no "
@@ -352,6 +483,9 @@ def main() -> None:
         print("\n# gal artifact lifecycle: cold fit vs warm load "
               "(name,us,derived)")
         gal_artifact_benchmark(json_rows=json_rows)
+        print("\n# gal membership + contributivity "
+              "(name,us,derived)")
+        gal_membership_benchmark(json_rows=json_rows)
         print("\n# gal shard engine scaling")
         gal_shard_scaling_benchmark(json_rows=json_rows)
         if args.json_out:
@@ -380,6 +514,10 @@ def main() -> None:
     print("\n# gal artifact lifecycle: cold fit vs warm load "
           "(name,us,derived)")
     gal_artifact_benchmark(json_rows=json_rows)
+
+    print("\n# gal membership + contributivity: dropout overhead and the "
+          "LOO resume speedup (name,us,derived)")
+    gal_membership_benchmark(json_rows=json_rows)
 
     print("\n# gal shard engine scaling: rounds/sec at forced host devices "
           "(name,us_per_round,derived)")

@@ -381,6 +381,10 @@ def save_artifact(result: Any, path: str | Path) -> Path:
         "n_orgs": int(n_orgs),
         "t_next": t_next,
         "eval_names": eval_names,
+        # executed-round membership ledger (None for all-live fits) —
+        # resume needs it to reconstruct joiners' zero-weight history and
+        # DMS orgs' dead slots; optional so pre-membership artifacts load
+        "membership": result.membership,
     }
     (path / ARTIFACT_MANIFEST).write_text(json.dumps(manifest, indent=2))
     return path
@@ -462,6 +466,9 @@ def load_artifact(path: str | Path,
         group_dims=group_dims, group_pads=group_pads,
         mesh_devices=0, engine=manifest["engine"],
         config=config, resume_state=resume_state,
+        membership=([list(map(bool, row))
+                     for row in manifest["membership"]]
+                    if manifest.get("membership") else None),
     )
 
 

@@ -1,0 +1,183 @@
+"""Contributivity: counterfactual org valuation for a GAL collaboration.
+
+How much did each organization's assistance actually buy? The GAL
+protocol never shares data or models, so the only honest answer is
+counterfactual: rerun the collaboration with org j (or a whole coalition)
+absent and measure how much worse the final value gets. Dynamic
+membership (``core.membership``) makes those counterfactuals exact AND
+cheap:
+
+* exact — a fit with org j masked out of every round is *bitwise* equal
+  to fitting the reduced org set (the masked-softmax weight fit pins
+  absent orgs to weight exactly 0.0, and XLA's reductions treat the
+  resulting zero terms as inert; pinned by ``tests/test_membership.py``);
+* cheap — the counterfactuals only need to diverge from round ``t0``
+  onward, so one shared base fit to ``t0`` is saved as a resume carry and
+  every coalition refit resumes from it, paying only ``rounds - t0``
+  assistance rounds (the resumed rounds are draw-for-draw identical to a
+  from-scratch masked fit; ``tests/test_membership.py`` pins that too).
+
+Two estimators over the same coalition-value function
+``v(S) = history[value][-1] of the fit where only S attends rounds t0..T``
+with ``v(emptyset) = history[value][t0]`` (nobody assists past the base):
+
+* ``leave_one_out`` — ``score_j = v(all - {j}) - v(all)``: the value
+  increase when org j alone walks away. M counterfactual refits.
+* ``truncated_shapley`` — TMC-Shapley (Ghorbani & Zou, 2019): the
+  permutation-averaged marginal ``v(S) - v(S + {j})``, sampled over
+  permutations (exhaustive when M! fits the budget, where the estimate is
+  the exact Shapley value and satisfies efficiency:
+  ``sum(scores) == v(emptyset) - v(all)``), with an optional truncation
+  tolerance that stops a permutation walk once the running value is
+  within ``truncation_tol`` of the full-coalition value. Coalition values
+  are cached by frozenset, so the refit count is the number of DISTINCT
+  coalitions visited, not permutations x M.
+
+Scores measure the DECREASE in ``value`` attributable to the org:
+positive = the org lowers the recorded column (good when ``value`` is a
+loss; flip the reading for higher-is-better metric columns). Both
+estimators ledger their report into ``full.history["contributions"]`` —
+a dict column the artifact resume machinery deliberately ignores — and
+``launch.serve --contributions`` prints it as a per-org table.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def _coalition_values(rng, orgs, y, loss, config, t0, value, eval_sets,
+                      full=None):
+    """Build the cached coalition-value closure shared by both estimators.
+
+    Returns ``(full, v, v_full, v_empty, counter)`` where ``v(S)`` maps an
+    iterable of org positions to the final ``value`` of the counterfactual
+    fit in which only ``S`` attends rounds ``t0..T``, and ``counter`` is a
+    single-element list tracking how many refits actually ran."""
+    from repro.core import gal as gal_mod
+
+    m = len(orgs)
+    rounds = config.rounds
+    if not 0 <= t0 < rounds:
+        raise ValueError(f"t0 must be in [0, rounds)=[0, {rounds}), got {t0}")
+    if full is None:
+        full = gal_mod.fit(rng, orgs, y, loss, config, eval_sets=eval_sets)
+    if value not in full.history:
+        raise ValueError(
+            f"value column {value!r} not in the fit history; available: "
+            f"{sorted(full.history)}")
+    v_full = float(full.history[value][-1])
+    # the shared base: everything before t0 is common to every coalition,
+    # so fit it once and resume each counterfactual from its carry
+    base = None
+    if t0 > 0:
+        base = gal_mod.fit(rng, orgs, y, loss,
+                           dataclasses.replace(config, rounds=t0),
+                           eval_sets=eval_sets)
+    v_empty = float(full.history[value][t0])
+    cache: Dict[frozenset, float] = {frozenset(range(m)): v_full,
+                                     frozenset(): v_empty}
+    counter = [0]
+
+    def v(coalition) -> float:
+        fs = frozenset(int(j) for j in coalition)
+        if not fs <= set(range(m)):
+            raise ValueError(f"coalition {sorted(fs)} has org positions "
+                             f"outside range({m})")
+        if fs in cache:
+            return cache[fs]
+        sched = np.ones((rounds, m), bool)
+        sched[t0:, :] = False
+        sched[t0:, sorted(fs)] = True
+        res = gal_mod.fit(rng, orgs, y, loss, config, eval_sets=eval_sets,
+                          membership=sched, resume_from=base)
+        counter[0] += 1
+        val = float(res.history[value][-1])
+        cache[fs] = val
+        return val
+
+    return full, v, v_full, v_empty, counter
+
+
+def leave_one_out(rng, orgs, y, loss, config, *, t0: int = 0,
+                  value: str = "train_loss", eval_sets=None,
+                  full=None) -> Dict[str, Any]:
+    """Leave-one-out contributivity: ``score_j = v(all - {j}) - v(all)``.
+
+    ``full`` optionally passes an already-completed fit of the SAME
+    (rng, orgs, config) so it is not refit. The report is returned AND
+    ledgered into ``full.history["contributions"]``."""
+    m = len(orgs)
+    full, v, v_full, v_empty, counter = _coalition_values(
+        rng, orgs, y, loss, config, t0, value, eval_sets, full)
+    everyone = set(range(m))
+    scores = [v(everyone - {j}) - v_full for j in range(m)]
+    report = {
+        "method": "loo", "value": value, "t0": int(t0),
+        "v_full": v_full, "v_empty": v_empty,
+        "scores": scores, "org_ids": [int(o.index) for o in orgs],
+        "refits": counter[0],
+    }
+    full.history["contributions"] = report
+    return report
+
+
+def truncated_shapley(rng, orgs, y, loss, config, *, t0: int = 0,
+                      value: str = "train_loss", eval_sets=None,
+                      n_permutations: Optional[int] = None,
+                      truncation_tol: float = 0.0, perm_seed: int = 0,
+                      full=None) -> Dict[str, Any]:
+    """Truncated-Monte-Carlo Shapley over the coalition-value function.
+
+    ``n_permutations`` defaults to exhaustive (all M!) for M <= 4 and
+    ``4 * M`` sampled permutations otherwise; passing ``>= M!`` always
+    goes exhaustive, making the estimate the exact Shapley value —
+    invariant under org relabeling and efficient
+    (``sum(scores) == v_empty - v_full``). ``truncation_tol`` stops a
+    permutation walk early once ``|v(S) - v_full| <= truncation_tol``
+    (the remaining orgs in that permutation get a zero marginal)."""
+    m = len(orgs)
+    full, v, v_full, v_empty, counter = _coalition_values(
+        rng, orgs, y, loss, config, t0, value, eval_sets, full)
+    total_perms = math.factorial(m)
+    if n_permutations is None:
+        n_permutations = total_perms if total_perms <= 24 else 4 * m
+    if n_permutations < 1:
+        raise ValueError(f"n_permutations must be >= 1, got {n_permutations}")
+    exhaustive = n_permutations >= total_perms
+    if exhaustive:
+        perms = list(itertools.permutations(range(m)))
+    else:
+        prng = np.random.default_rng(perm_seed)
+        perms = [tuple(int(j) for j in prng.permutation(m))
+                 for _ in range(n_permutations)]
+
+    totals = np.zeros(m, np.float64)
+    truncated_walks = 0
+    for perm in perms:
+        coalition: list = []
+        prev = v_empty
+        for pos, j in enumerate(perm):
+            if truncation_tol > 0.0 and abs(prev - v_full) <= truncation_tol:
+                truncated_walks += 1
+                break                 # remaining marginals treated as zero
+            coalition.append(j)
+            cur = v(coalition)
+            totals[j] += prev - cur
+            prev = cur
+    scores = (totals / len(perms)).tolist()
+    report = {
+        "method": "shapley", "value": value, "t0": int(t0),
+        "v_full": v_full, "v_empty": v_empty,
+        "scores": scores, "org_ids": [int(o.index) for o in orgs],
+        "n_permutations": len(perms), "exhaustive": exhaustive,
+        "truncation_tol": float(truncation_tol),
+        "truncated_walks": truncated_walks,
+        "refits": counter[0],
+    }
+    full.history["contributions"] = report
+    return report

@@ -79,6 +79,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
@@ -178,7 +180,7 @@ def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
 
 def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
                 m, n, k, masked, metrics, alice_loss, state0=(), t0=0,
-                restore=None):
+                restore=None, member_sched=None, org_ids=None):
     """The shared T-round loop of both fused engines: Alg. 1 steps 1-6
     traced once and scanned over rounds ``t0 .. config.rounds`` (``t0=0``
     for a fresh fit; a resumed fit restores the scan carry and picks up
@@ -216,13 +218,30 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
     per-round split chain continues where it left off — including through
     early-stop-masked rounds, which still split).
 
+    ``member_sched`` is the (config.rounds, M) boolean membership schedule
+    (``core.membership``); round t's row rides the scan inputs next to the
+    round index, masks that round's weight fit (absent orgs get weight
+    exactly 0.0 — so they also contribute exact zeros to the direction and
+    to every eval combine), and is handed to ``fit_orgs`` for engine-side
+    bookkeeping (DMS carry freezing). ``org_ids`` keys the weight-fit
+    theta draws by org IDENTITY, so a reduced org set draws the same
+    per-org jitter — together these make a masked fit bitwise-equal to
+    fitting the reduced org set. ``None`` means every org attends every
+    round (the pre-membership fast path, bit-identical to it).
+
     Everything else — residual, privacy, weight fit, eta line search,
     masked early stopping, history bookkeeping — is engine-independent and
     lives here exactly once. Returns ``(outs, init, carry_final)``; the
     full final carry is what ``GALResult.resume_state`` (and therefore the
     on-disk artifact) persists.
     """
-    def round_step(carry, t):
+    have_sched = member_sched is not None
+
+    def round_step(carry, xs):
+        t, member_row = xs
+        # membership off -> the literal pre-membership code path (mask=None
+        # everywhere), so an unmasked fit stays bit-identical to before
+        member = member_row if have_sched else None
         f, f_evals, key, active, state = carry
         key, k_round = jax.random.split(key)
         # 1. pseudo-residual  2. privatized broadcast
@@ -234,16 +253,17 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
         ))
         # 3. parallel local fits over the org axis
         state, params_out, preds, combine = fit_orgs(
-            k_round, r_bcast, t, state, active)
-        # 4. gradient assistance weights
+            k_round, r_bcast, t, state, active, member)
+        # 4. gradient assistance weights (masked over this round's live orgs)
         if config.use_weights and m > 1:
             w = fit_weights(
                 jax.random.fold_in(k_round, 29), residual, preds,
                 alice_loss, epochs=config.weight_epochs,
                 lr=config.weight_lr, weight_decay=config.weight_decay,
+                mask=member, org_ids=org_ids,
             )
         else:
-            w = uniform_weights(m)
+            w = uniform_weights(m, mask=member)
         direction = combine(w, None)
 
         # 5. line-search eta   6. masked ensemble update
@@ -287,13 +307,15 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
         for mname, metric_fn in (metrics or {}).items():
             init[f"{name}_{mname}"] = metric_fn(y_e, f_evals[name])
     carry0 = (f, f_evals, key, active0, state0)
+    sched_rows = (jnp.ones((config.rounds - t0, m), bool)
+                  if member_sched is None else member_sched[t0:])
     carry, outs = jax.lax.scan(round_step, carry0,
-                               jnp.arange(t0, config.rounds))
+                               (jnp.arange(t0, config.rounds), sched_rows))
     return outs, init, carry
 
 
 def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
-                   k_out):
+                   k_out, live_m=None):
     """One organization's Deep Model Sharing refit at 0-based round ``t``,
     replicating ``Organization._fit_round_dms`` with FIXED-shape buffers so
     the whole thing lives inside the scanned round step:
@@ -309,6 +331,13 @@ def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
         them untouched (the masked mean equals the reference's mean over
         its t live heads term for term).
 
+    ``live_m`` is this org's (T,) membership column (None = always live):
+    rounds the org skipped are dead slots — their heads stay zero, they are
+    masked out of the refit objective exactly like not-yet-live slots, and
+    the divisor counts attended rounds only. (The caller freezes the whole
+    per-org state update when the org is absent THIS round; the column
+    keeps its past absences out of every later refit.)
+
     Returns the refit ``(ext_m, heads_m)`` and this round's fitted values
     ``apply_head(heads_m[t], features(ext_m, x_m))``.
     """
@@ -318,6 +347,9 @@ def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
         heads_m, head_new)
     rounds_total = rhist.shape[0]
     mask = jnp.arange(rounds_total) <= t
+    if live_m is not None:
+        mask = mask & live_m
+    n_live = jnp.maximum(jnp.sum(mask), 1) if live_m is not None else t + 1
 
     def objective(p):
         ext, heads = p
@@ -334,7 +366,7 @@ def _dms_org_round(model, lloss, key_m, x_m, ext_m, heads_m, rhist, t,
         mask3 = mask[:, None, None]
         safe_preds = jnp.where(mask3, preds, rhist + 1.0)
         per_slot = jax.vmap(lloss)(rhist, safe_preds)       # (T,)
-        return jnp.sum(jnp.where(mask, per_slot, 0.0)) / (t + 1)
+        return jnp.sum(jnp.where(mask, per_slot, 0.0)) / n_live
 
     opt = adam(getattr(model, "lr", 1e-3))
 
@@ -392,7 +424,8 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                 eval_sets: Optional[Dict[str, tuple]] = None,
                 metrics: Optional[Dict[str, Callable]] = None, *,
                 plan: Optional[ExecutionPlan] = None,
-                resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+                resume: Optional[Dict[str, Any]] = None,
+                membership=None) -> Dict[str, Any]:
     """Run Algorithm 1 as one jitted scan over the planner's groups.
 
     Every group is a ``jax.vmap`` of its own model over its own stacked
@@ -425,6 +458,16 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
     extractor/head/residual buffers, padded out to the new round count —
     and scans only rounds ``t_next .. config.rounds``; the returned dict
     then covers the NEW rounds only (the caller stitches).
+
+    ``membership`` is the resolved bool (config.rounds, M) attendance
+    schedule from ``core.membership.resolve_membership`` (None = all
+    live): round t's row masks the weight fit (absent orgs get weight
+    exactly 0.0), DMS orgs freeze their shared-extractor/head state in
+    rounds they skip (their skipped slots stay dead in every later
+    refit), and the per-round communication / model-memory ledgers count
+    only the live orgs. On a resume the schedule must cover ALL rounds —
+    rows before ``t_next`` are the collaboration's recorded history (they
+    drive the DMS dead-slot masks), rows from ``t_next`` on are executed.
     """
     if plan is None:
         plan = plan_orgs(orgs, eval_sets)
@@ -448,6 +491,9 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
     group_ids = [jnp.asarray(g.org_ids, jnp.uint32) for g in groups]
     group_pos = [jnp.asarray(g.indices, jnp.int32) for g in groups]
     inv_perm = jnp.asarray(plan.inverse_permutation, jnp.int32)
+    org_ids_all = jnp.asarray([org.index for org in orgs], jnp.uint32)
+    sched_np = None if membership is None else np.asarray(membership, bool)
+    sched_in = None if sched_np is None else jnp.asarray(sched_np)
 
     y_in = y if mesh is None else jax.device_put(y, org_replicated(mesh))
     eval_stacks = {}
@@ -476,8 +522,12 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
         if mesh is not None:
             resume_in = jax.tree_util.tree_map(
                 lambda a: jax.device_put(a, org_replicated(mesh)), resume_in)
+    if mesh is not None:
+        org_ids_all = jax.device_put(org_ids_all, org_replicated(mesh))
+        if sched_in is not None:
+            sched_in = jax.device_put(sched_in, org_replicated(mesh))
 
-    def run(key, y_dev, xg_in, evals_in, res_in):
+    def run(key, y_dev, xg_in, evals_in, res_in, sched_dev, ids_dev):
         # DMS carry: one shared (T, N, K) residual-history buffer plus each
         # DMS group's extractor stack and (M_g, T, ...) head buffers. The
         # extractor inits replicate the reference exactly: round 0's
@@ -510,7 +560,7 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                         head_spec),
                 }
 
-        def fit_orgs(k_round, r_bcast, t, state, active):
+        def fit_orgs(k_round, r_bcast, t, state, active, member):
             new_state = dict(state)
             if plan.has_dms:
                 new_state["rhist"] = jax.lax.dynamic_update_index_in_dim(
@@ -523,14 +573,44 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                 if g.dms:
                     gs = state[f"g{gi}"]
 
-                    def dms_one(key_m, x_m, ext_m, heads_m,
-                                model=g.model, lloss=g.local_loss):
-                        return _dms_org_round(
-                            model, lloss, key_m, x_m, ext_m, heads_m,
-                            new_state["rhist"], t, k)
+                    if sched_dev is None:
+                        def dms_one(key_m, x_m, ext_m, heads_m,
+                                    model=g.model, lloss=g.local_loss):
+                            return _dms_org_round(
+                                model, lloss, key_m, x_m, ext_m, heads_m,
+                                new_state["rhist"], t, k)
 
-                    ext_new, heads_new, preds_t = jax.vmap(dms_one)(
-                        keys, xg_in[gi], gs["extractor"], gs["heads"])
+                        ext_new, heads_new, preds_t = jax.vmap(dms_one)(
+                            keys, xg_in[gi], gs["extractor"], gs["heads"])
+                    else:
+                        # each org's (T,) membership column rides the vmap:
+                        # its skipped rounds are dead head slots, masked
+                        # out of every later refit objective
+                        live_g = sched_dev[:, group_pos[gi]].T    # (Mg, T)
+
+                        def dms_one(key_m, x_m, ext_m, heads_m, live_m,
+                                    model=g.model, lloss=g.local_loss):
+                            return _dms_org_round(
+                                model, lloss, key_m, x_m, ext_m, heads_m,
+                                new_state["rhist"], t, k, live_m)
+
+                        ext_new, heads_new, preds_t = jax.vmap(dms_one)(
+                            keys, xg_in[gi], gs["extractor"], gs["heads"],
+                            live_g)
+                        # absent THIS round: the whole per-org DMS state
+                        # update is frozen — the skipped slot's head stays
+                        # zero and the shared extractor is untouched,
+                        # exactly as the reference loop's skip would leave
+                        keep = member[group_pos[gi]]
+
+                        def _frz(a, b, keep=keep):
+                            shape = keep.shape + (1,) * (a.ndim - 1)
+                            return jnp.where(keep.reshape(shape), a, b)
+
+                        ext_new = jax.tree_util.tree_map(
+                            _frz, ext_new, gs["extractor"])
+                        heads_new = jax.tree_util.tree_map(
+                            _frz, heads_new, gs["heads"])
                     new_state[f"g{gi}"] = {"extractor": ext_new,
                                            "heads": heads_new}
                     dms_g[gi] = new_state[f"g{gi}"]
@@ -592,17 +672,25 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                            loss=loss, config=config, m=m, n=n, k=k,
                            masked=masked, metrics=metrics,
                            alice_loss=alice_loss, state0=state0, t0=t0,
-                           restore=restore)
+                           restore=restore, member_sched=sched_dev,
+                           org_ids=ids_dev)
 
     outs, init, carry = jax.jit(run)(key0, y_in, tuple(group_x),
-                                     eval_stacks, resume_in)
+                                     eval_stacks, resume_in, sched_in,
+                                     org_ids_all)
     state_final = carry[4]
-    bcast_b, gather_b = gal_round_bytes(
-        n, k, m, [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
     dms_flags = [False] * m
     for g in groups:
         for i in g.indices:
             dms_flags[i] = g.dms
+    eval_ns = [int(y_e.shape[0])
+               for (_, y_e) in (eval_sets or {}).values()]
+    if sched_np is None:
+        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns)
+    else:
+        from repro.core.membership import membership_comm_ledger
+        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns)
+        bcast_b, gather_b = bcast_l[t0:], gather_l[t0:]
     single = len(groups) == 1 and not plan.has_dms
     out = _finalize(outs, init, masked, config.rounds - t0,
                     dims=group_dims[0] if single else None,
@@ -610,7 +698,11 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
                     comm={"comm_broadcast_bytes": bcast_b,
                           "comm_gather_bytes": gather_b,
                           "model_memories": gal_model_memories(
-                              config.rounds, dms_flags)[t0:]})
+                              config.rounds, dms_flags,
+                              membership=sched_np)[t0:]})
+    if sched_np is not None:
+        # executed rows only (early-stop trimmed), host bools in org order
+        out["membership"] = sched_np[t0:t0 + len(out["etas"])].tolist()
     group_params = list(out["params"])            # tuple trimmed by _finalize
     for gi, g in enumerate(groups):
         if g.dms:
@@ -637,19 +729,21 @@ def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
              config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
              metrics: Optional[Dict[str, Callable]] = None, *,
              plan: Optional[ExecutionPlan] = None,
-             resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+             resume: Optional[Dict[str, Any]] = None,
+             membership=None) -> Dict[str, Any]:
     """The legacy homogeneous fast path: ``fit_grouped`` on a single-group
     plan (one model vmapped over one org stack). Kept as the named engine
     behind ``GALConfig.engine="scan"``; the dispatch in ``gal.fit`` enforces
     the single-noiseless-group contract before calling it."""
     return fit_grouped(rng, orgs, y, loss, config, eval_sets, metrics,
-                       plan=plan, resume=resume)
+                       plan=plan, resume=resume, membership=membership)
 
 
 def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
               config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
               metrics: Optional[Dict[str, Callable]] = None,
-              resume: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+              resume: Optional[Dict[str, Any]] = None,
+              membership=None) -> Dict[str, Any]:
     """Run Algorithm 1 org-sharded across devices (see the module docstring).
 
     Same contract as ``fit_scan`` — the T-round ``lax.scan``, the single
@@ -665,7 +759,13 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     ``resume`` restores an artifact's round-scan carry (replicated across
     the mesh — the ensemble state and RNG chain are org-independent) and
     scans rounds ``t_next .. config.rounds`` only, exactly as
-    ``fit_grouped`` does; shard plans are stateless (no DMS carry)."""
+    ``fit_grouped`` does; shard plans are stateless (no DMS carry).
+
+    ``membership`` (resolved bool (rounds, M) schedule or None) rides the
+    mesh replicated: an absent org's device still fits — the collectives
+    have static shapes — but its assistance weight is exactly 0.0, so its
+    psum contribution is exact zeros and the recorded per-round wire
+    ledger counts only the live orgs."""
     m = len(orgs)
     if not org_mesh_eligible(m):
         raise ValueError(
@@ -685,6 +785,15 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     org_ids = jax.device_put(
         jnp.asarray([org.index for org in orgs], jnp.uint32),
         org_stack_sharding(mesh, 1))
+    # Alice's full id vector + the membership schedule ride replicated:
+    # the weight fit is her step, not a per-device one
+    ids_full = jax.device_put(
+        jnp.asarray([org.index for org in orgs], jnp.uint32),
+        org_replicated(mesh))
+    sched_np = None if membership is None else np.asarray(membership, bool)
+    sched_in = (None if sched_np is None
+                else jax.device_put(jnp.asarray(sched_np),
+                                    org_replicated(mesh)))
     y_dev = jax.device_put(y, org_replicated(mesh))
     eval_stacks, eval_in_specs = {}, {}
     if eval_sets:
@@ -709,7 +818,8 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                          for nm in eval_stacks},
              "active": resume["active"]})
 
-    def run(key, y_in, x_in, ids_in, evals_in, res_in=None):
+    def run(key, y_in, x_in, ids_in, evals_in, sched_dev, ids_all,
+            res_in=None):
         my_x = x_in[0]                 # this device's org slice (N, d_max)
         my_id = ids_in[0]
         pos = jax.lax.axis_index("org")
@@ -721,8 +831,10 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
             return jax.lax.psum(
                 jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
 
-        def fit_orgs(k_round, r_bcast, t, state, active):
-            del t, active  # single noiseless fresh-fit group: stateless
+        def fit_orgs(k_round, r_bcast, t, state, active, member):
+            del t, active, member  # single noiseless fresh-fit group:
+            # stateless, and membership acts purely through the step-4
+            # weight mask (w[pos] == 0.0 zeroes this device's psum term)
             # THIS device's local fit only (the scan engine's vmap axis
             # became the mesh axis); RNG key identical to the other engines
             params_m = model.fit(jax.random.fold_in(k_round, my_id), my_x,
@@ -745,7 +857,8 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
         return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
                            loss=loss, config=config, m=m, n=n, k=k,
                            masked=masked, metrics=metrics,
-                           alice_loss=alice_loss, t0=t0, restore=restore)
+                           alice_loss=alice_loss, t0=t0, restore=restore,
+                           member_sched=sched_dev, org_ids=ids_all)
 
     # everything in the scalar bundle is replicated (collectives + identical
     # per-device programs on replicated inputs); only the per-round params
@@ -760,8 +873,9 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     # carries, key and early-stop flag ride the collectives; the state
     # slot is the empty tuple (shard plans are stateless)
     carry_specs = (P(), {name: P() for name in eval_stacks}, P(), P(), ())
-    in_specs = [P(), P(), P("org"), P("org"), eval_in_specs]
-    operands = [key0, y_dev, x_stack, org_ids, eval_stacks]
+    in_specs = [P(), P(), P("org"), P("org"), eval_in_specs, P(), P()]
+    operands = [key0, y_dev, x_stack, org_ids, eval_stacks, sched_in,
+                ids_full]
     if resume_in is not None:
         in_specs.append({"f": P(),
                          "f_evals": {name: P() for name in eval_stacks},
@@ -779,13 +893,21 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     # her residual copy; all M orgs ship fitted values for the train AND
     # eval prediction stages). gal_round_bytes is the one formula every
     # engine's ledger comes from, so the history is engine-independent.
-    bcast_b, gather_b = gal_round_bytes(
-        n, k, m, [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()])
+    eval_ns = [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()]
+    if sched_np is None:
+        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns)
+    else:
+        from repro.core.membership import membership_comm_ledger
+        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns)
+        bcast_b, gather_b = bcast_l[t0:], gather_l[t0:]
     out = _finalize(outs, init, masked, config.rounds - t0, dims, pad_to,
                     comm={"comm_broadcast_bytes": bcast_b,
                           "comm_gather_bytes": gather_b,
                           "model_memories": gal_model_memories(
-                              config.rounds, [False] * m)[t0:]})
+                              config.rounds, [False] * m,
+                              membership=sched_np)[t0:]})
+    if sched_np is not None:
+        out["membership"] = sched_np[t0:t0 + len(out["etas"])].tolist()
     out["resume"] = {"t_next": config.rounds, "f": carry[0],
                      "f_evals": carry[1], "key": carry[2],
                      "active": carry[3], "state": {}}

@@ -135,6 +135,13 @@ class GALConfig:
     privacy: Optional[str] = None      # None | dp | ip
     privacy_alpha: float = 1.0
     privacy_intervals: int = 1
+    # dynamic-membership fault injection (core/membership.py): each org
+    # independently skips each round with probability straggler_sim, from a
+    # schedule seeded by straggler_seed (deterministic per config; rounds
+    # are repaired so at least one org always attends). Composes (AND)
+    # with an explicit fit(membership=...) schedule.
+    straggler_sim: Optional[float] = None
+    straggler_seed: int = 0
     # engine selection: "auto" asks the planner (repro.core.plan) and picks
     # the most capable engine that applies — org-sharded collectives for a
     # single noiseless group on an org mesh, the scan fast path for a
@@ -185,6 +192,12 @@ class GALResult:
     # fit(..., resume_from=...) restores; python-engine results keep None
     # (their state lives in the Organization objects and cannot resume).
     resume_state: Optional[Dict[str, Any]] = None
+    # the executed membership ledger: one row of per-org attendance bools
+    # per executed round (org order), or None when every org attended
+    # every round and no schedule was requested. Persisted in the
+    # gal-artifact/v1 manifest; a grown resume pads the historical rows
+    # with False for the joining orgs.
+    membership: Optional[List[List[bool]]] = None
 
     @property
     def rounds(self) -> int:
@@ -282,7 +295,8 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
         eval_sets: Optional[Dict[str, tuple]] = None,
         metric_fn: Optional[Callable] = None,
         metrics: Optional[Sequence] = None,
-        resume_from: Any = None) -> GALResult:
+        resume_from: Any = None,
+        membership: Any = None) -> GALResult:
     """Run T assistance rounds. ``eval_sets`` maps name -> (xs_list, y) and is
     evaluated with the *prediction-stage* mechanics each round (paper's
     validation protocol), producing the per-round curves of Fig. 4.
@@ -304,9 +318,25 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     appending etas/weights/history columns so the resumed result is
     draw-for-draw identical to an uninterrupted ``T``-round fit. The org
     set must plan into the identical group partition (same models, losses,
-    sigmas, slice widths), the config must match except ``rounds`` /
+    sigmas, slice widths) — or into a *compatible growth* of it (mid-fit
+    join): the original orgs unchanged in their original positions plus
+    new orgs appended after them, each joining an existing non-DMS group
+    (same model/loss/sigma, slice width within the group's fitted pad) or
+    forming a new non-DMS group. Joining orgs enter at round ``t0`` with a
+    zeroed weight history — the stitched result's weights, group params
+    and membership ledger carry exact zeros for them over the already-
+    completed rounds. The config must match except ``rounds`` /
     ``engine``, and the eval-set names must match the saved carries; any
     divergence raises with the specific mismatch.
+
+    ``membership`` is an optional (rounds, M) boolean attendance schedule
+    (see ``repro.core.membership``): orgs absent from round t are masked
+    out of that round's weight fit (weight exactly 0.0), contribute
+    nothing to the direction, and drop out of the round's communication /
+    model-memory ledgers. ``GALConfig.straggler_sim`` composes a seeded
+    random dropout schedule on top (logical AND). On a resume, schedule
+    rows before ``t0`` are overridden by the collaboration's recorded
+    history (the artifact's membership ledger; joining orgs absent).
 
     Engine dispatch is planner-driven: ``repro.core.plan.plan_orgs``
     partitions the orgs into homogeneous groups or names the reason the
@@ -319,8 +349,12 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     metric_map = _resolve_metrics(metric_fn, metrics, eval_sets)
     plan = plan_orgs(orgs, eval_sets,
                      probe_shape=(int(y.shape[0]), int(y.shape[-1])))
+    from repro.core.membership import resolve_membership
+    sched = resolve_membership(membership, config.straggler_sim,
+                               config.straggler_seed, config.rounds,
+                               len(orgs))
 
-    resume_art = resume_eng = None
+    resume_art = resume_eng = growth = None
     if resume_from is not None:
         if isinstance(resume_from, (str, Path)):
             from repro.checkpoint.checkpoint import load_artifact
@@ -354,8 +388,17 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
             raise ValueError(
                 f"resume_from needs a compilable organization set: "
                 f"{plan.reason}")
-        resume_eng = _prepare_resume(resume_art, orgs, plan, y, loss,
-                                     config, eval_sets, metric_map)
+        resume_eng, growth = _prepare_resume(resume_art, orgs, plan, y,
+                                             loss, config, eval_sets,
+                                             metric_map)
+        if growth is not None and config.straggler_sim:
+            raise ValueError(
+                "straggler_sim cannot span a mid-fit join: the seeded "
+                "schedule draws over (rounds, M) and a grown M would "
+                "retroactively change the already-completed rounds' "
+                "draws — pass an explicit membership schedule instead")
+        sched = _resume_schedule(resume_art, resume_eng, growth, sched,
+                                 config, len(orgs))
 
     if not plan.compiled:
         if config.engine in _COMPILED_ENGINES:
@@ -375,19 +418,50 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
             if why:
                 raise ValueError(
                     f"cannot run these organizations on ANY engine: {why}")
-        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
+        return _fit_python(rng, orgs, y, loss, config, eval_sets,
+                           metric_map, membership=sched)
     if config.engine == "python":
-        return _fit_python(rng, orgs, y, loss, config, eval_sets, metric_map)
+        return _fit_python(rng, orgs, y, loss, config, eval_sets,
+                           metric_map, membership=sched)
 
     result = _dispatch_compiled(rng, orgs, y, loss, config, eval_sets,
-                                metric_map, plan, resume_eng)
+                                metric_map, plan, resume_eng, sched)
     if resume_art is not None:
-        result = _stitch_resume(resume_art, result, plan)
+        result = _stitch_resume(resume_art, result, plan, growth=growth)
     return result
 
 
+def _resume_schedule(art: GALResult, resume_eng: Dict[str, Any], growth,
+                     sched, config: GALConfig, m: int):
+    """Assemble the full-rounds engine schedule for a resumed fit: rows
+    before ``t_next`` are the collaboration's recorded history — the
+    artifact's membership ledger over the original orgs, padded with False
+    for orgs joining now — and rows from ``t_next`` on come from the
+    caller's resolved schedule (all live when none was given). Historical
+    rows drive the DMS dead-slot masks and the stitched ledger; they are
+    never re-executed. Returns None when no membership story exists at
+    all (no schedule, no artifact ledger, no join), which keeps the
+    pre-membership engine path bit-for-bit."""
+    art_rows = art.membership
+    if sched is None and art_rows is None and growth is None:
+        return None
+    t0 = int(resume_eng["t_next"])
+    m_old = growth["m_old"] if growth is not None else m
+    hist = (np.ones((t0, m_old), bool) if art_rows is None
+            else np.asarray(art_rows, bool))
+    if hist.shape != (t0, m_old):
+        raise ValueError(
+            f"artifact membership ledger shape {hist.shape} does not "
+            f"match its {t0} completed rounds over {m_old} orgs")
+    full = np.zeros((t0, m), bool)
+    full[:, :m_old] = hist
+    exec_rows = (np.ones((config.rounds - t0, m), bool) if sched is None
+                 else np.asarray(sched, bool)[t0:])
+    return np.vstack([full, exec_rows])
+
+
 def _dispatch_compiled(rng, orgs, y, loss, config, eval_sets, metric_map,
-                       plan, resume) -> GALResult:
+                       plan, resume, membership=None) -> GALResult:
     if config.engine == "scan":
         if not plan.homogeneous:
             raise ValueError(
@@ -396,40 +470,43 @@ def _dispatch_compiled(rng, orgs, y, loss, config, eval_sets, metric_map,
                 "(or 'auto') to fuse heterogeneous/noisy/DMS organizations")
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         resume=resume)
+                         resume=resume, membership=membership)
     if config.engine == "shard":
         if plan.homogeneous:
             # fit_shard itself raises the org-mesh "must divide" error
             return _fit_fast(engine_mod.fit_shard, "shard", plan,
                              rng, orgs, y, loss, config, eval_sets,
-                             metric_map, resume=resume)
+                             metric_map, resume=resume,
+                             membership=membership)
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         require_mesh=True, resume=resume)
+                         require_mesh=True, resume=resume,
+                         membership=membership)
     if config.engine == "grouped":
         return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         resume=resume)
+                         resume=resume, membership=membership)
     # auto: most capable engine that applies
     if plan.homogeneous and org_mesh_eligible(len(orgs)):
         return _fit_fast(engine_mod.fit_shard, "shard", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         resume=resume)
+                         resume=resume, membership=membership)
     if plan.homogeneous:
         return _fit_fast(engine_mod.fit_scan, "scan", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
-                         resume=resume)
+                         resume=resume, membership=membership)
     return _fit_fast(engine_mod.fit_grouped, "grouped", plan,
                      rng, orgs, y, loss, config, eval_sets, metric_map,
-                     resume=resume)
+                     resume=resume, membership=membership)
 
 
 def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
               metrics, require_mesh: bool = False,
-              resume: Optional[Dict[str, Any]] = None) -> GALResult:
+              resume: Optional[Dict[str, Any]] = None,
+              membership=None) -> GALResult:
     if engine_fn is engine_mod.fit_shard:
         out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics,
-                        resume=resume)
+                        resume=resume, membership=membership)
     else:
         if require_mesh:
             from repro.launch.mesh import grouped_mesh_eligible
@@ -446,7 +523,7 @@ def _fit_fast(engine_fn, name, plan, rng, orgs, y, loss, config, eval_sets,
                     "a multi-device host; use engine='grouped' for the "
                     "single-host fused path")
         out = engine_fn(rng, orgs, y, loss, config, eval_sets, metrics,
-                        plan=plan, resume=resume)
+                        plan=plan, resume=resume, membership=membership)
     return _fast_result(orgs, y, loss, out, name, plan, config)
 
 
@@ -471,6 +548,7 @@ def _fast_result(orgs, y, loss, out, engine: str, plan: ExecutionPlan,
         plan=plan, group_params=group_params, group_dims=group_dims,
         group_pads=group_pads, mesh_devices=out.get("mesh_devices", 0),
         engine=engine, config=config, resume_state=out.get("resume"),
+        membership=out.get("membership"),
     )
 
 
@@ -484,15 +562,22 @@ _LEDGER_COLS = ("comm_broadcast_bytes", "comm_gather_bytes",
 def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
                     config: GALConfig, eval_sets,
                     metric_map: Optional[Dict[str, Callable]] = None
-                    ) -> Dict[str, Any]:
+                    ) -> tuple:
     """Validate a resume request against the artifact and build the engine
     resume dict. Every check raises with the specific mismatch — a resumed
     carry on the wrong org set / config / data would produce silently
-    wrong rounds, which is strictly worse than an error."""
+    wrong rounds, which is strictly worse than an error.
+
+    Returns ``(resume_dict, growth)``: ``growth`` is None for an identical
+    org set, or — for a *compatible growth* (mid-fit join, see
+    ``plan.plan_growth_mismatch``) — a dict with the artifact geometry the
+    stitcher needs (``m_old``, per-old-group sizes) to zero-pad the
+    joining orgs' completed-round history."""
     import dataclasses as _dc
 
     from repro.checkpoint.checkpoint import loss_spec, model_spec
-    from repro.core.plan import plan_mismatch, plan_to_manifest
+    from repro.core.plan import (plan_growth_mismatch, plan_mismatch,
+                                 plan_to_manifest)
     from repro.data.partition import group_widths
 
     rs = art.resume_state
@@ -501,21 +586,48 @@ def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
             "this result/artifact has no resume state: python-engine fits "
             "hold their rounds in live Organization objects and cannot "
             "resume — refit on a compiled engine and save that")
-    why = plan_mismatch(
-        plan, plan_to_manifest(art.plan, model_spec, loss_spec),
-        model_spec, loss_spec)
+    manifest = plan_to_manifest(art.plan, model_spec, loss_spec)
+    growth = None
+    why = plan_mismatch(plan, manifest, model_spec, loss_spec)
     if why is not None:
-        raise ValueError(
-            f"resume_from organization set does not match the artifact's "
-            f"execution plan: {why}")
+        gwhy = plan_growth_mismatch(plan, manifest, model_spec, loss_spec)
+        if gwhy is not None:
+            raise ValueError(
+                f"resume_from organization set does not match the "
+                f"artifact's execution plan ({why}) and is not a "
+                f"compatible growth of it ({gwhy})")
+        old_sizes = [len(g["org_ids"]) for g in manifest["groups"]]
+        growth = {"m_old": sum(old_sizes), "old_sizes": old_sizes,
+                  "n_old_groups": len(old_sizes)}
     dims_now = group_widths([o.x_train for o in orgs],
                             [g.indices for g in plan.groups])
     dims_art = [[int(d) for d in gd] for gd in art.group_dims]
-    if dims_now != dims_art:
-        raise ValueError(
-            f"resume_from slice widths {dims_now} do not match the "
-            f"artifact's fitted widths {dims_art} (per group, in org "
-            f"order)")
+    if growth is None:
+        if dims_now != dims_art:
+            raise ValueError(
+                f"resume_from slice widths {dims_now} do not match the "
+                f"artifact's fitted widths {dims_art} (per group, in org "
+                f"order)")
+    else:
+        # original members must keep their fitted widths; joiners must fit
+        # inside the group's fitted pad (stack_groups would otherwise grow
+        # the pad and the completed rounds' params could not be stitched)
+        for gi, n_old in enumerate(growth["old_sizes"]):
+            if dims_now[gi][:n_old] != dims_art[gi]:
+                raise ValueError(
+                    f"resume_from group {gi} original-member slice widths "
+                    f"{dims_now[gi][:n_old]} do not match the artifact's "
+                    f"fitted widths {dims_art[gi]}")
+            pad = art.group_pads[gi]
+            wide = [w for w in dims_now[gi][n_old:]
+                    if pad is not None and w > pad]
+            if wide:
+                raise ValueError(
+                    f"orgs joining group {gi} have slice widths {wide} "
+                    f"wider than the group's fitted pad ({pad}); the "
+                    f"completed rounds' params were fit on {pad}-column "
+                    f"stacks and cannot be re-padded — join with narrower "
+                    f"slices or form a new group (different model config)")
     t0 = int(rs["t_next"])
     if config.rounds <= t0:
         raise ValueError(
@@ -575,11 +687,16 @@ def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
         expected.add(f"{nm}_loss")
         for mname in (metric_map or {}):
             expected.add(f"{nm}_{mname}")
-    if expected != set(art.history):
+    # "contributions" is a post-fit annotation (core/contrib.py), not a
+    # per-round curve: it never blocks a resume, and the stitcher drops it
+    # (the scores describe the artifact's org set up to ITS final round)
+    if expected != set(art.history) - {"contributions"}:
         raise ValueError(
             f"resume history columns would not match the artifact's "
-            f"(differing: {sorted(expected ^ set(art.history))}); resume "
-            f"with the same metrics/metric_fn the original fit used")
+            f"(differing: "
+            f"{sorted(expected ^ (set(art.history) - {'contributions'}))})"
+            f"; resume with the same metrics/metric_fn the original fit "
+            f"used")
     return {
         "t_next": t0,
         "f": f,
@@ -588,65 +705,128 @@ def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
         "active": jnp.asarray(rs["active"]),
         "state": jax.tree_util.tree_map(jnp.asarray,
                                         dict(rs.get("state") or {})),
-    }
+    }, growth
 
 
-def _stitch_resume(art: GALResult, new: GALResult,
-                   plan: ExecutionPlan) -> GALResult:
+def _stitch_resume(art: GALResult, new: GALResult, plan: ExecutionPlan,
+                   growth=None) -> GALResult:
     """Concatenate an artifact's completed rounds with the freshly resumed
     ones into one seamless GALResult: etas/weights append, history columns
     extend (ledger columns verbatim, curve columns minus the restored-carry
     init row), fresh-fit group params concatenate on the round axis, and
     DMS group params are taken whole from the resumed carry (its stacked
-    head buffer already spans every round)."""
-    if set(art.history) != set(new.history):
+    head buffer already spans every round).
+
+    ``growth`` (from ``_prepare_resume``) marks a mid-fit join: orgs that
+    joined at the resume point get a zeroed completed-round history — the
+    artifact's per-round weights gain exact-zero columns, grown groups'
+    params gain zero org-lanes, brand-new groups get zero rounds, and the
+    stitched membership ledger records them absent — so ``predict`` at any
+    pre-join prefix reproduces the original collaboration exactly. The
+    artifact's post-fit "contributions" annotation (if any) is dropped:
+    the scores describe the OLD org set up to the old final round."""
+    art_hist = {c: v for c, v in art.history.items()
+                if c != "contributions"}
+    if set(art_hist) != set(new.history):
         raise ValueError(
             f"resumed history columns do not match the artifact's "
-            f"(differing: {sorted(set(new.history) ^ set(art.history))}); "
+            f"(differing: {sorted(set(new.history) ^ set(art_hist))}); "
             f"resume with the same metrics/metric_fn the original fit "
             f"used")
     hist: Dict[str, List[float]] = {}
     for col, vals in new.history.items():
-        old = list(art.history[col])
+        old = list(art_hist[col])
         hist[col] = old + (list(vals) if col in _LEDGER_COLS
                            else list(vals[1:]))
+    t_old = len(art.etas)
+    m_new = sum(g.size for g in plan.groups)
+    n_old_groups = (growth["n_old_groups"] if growth is not None
+                    else plan.n_groups)
+    old_sizes = (growth["old_sizes"] if growth is not None
+                 else [g.size for g in plan.groups])
     group_params: List[Any] = []
     for gi, g in enumerate(plan.groups):
         if g.dms:
             group_params.append(new.group_params[gi])
             continue
+        leaves_new, treedef = jax.tree_util.tree_flatten(
+            new.group_params[gi])
+        if gi >= n_old_groups:
+            # a group born at the join: its completed rounds are exact
+            # zeros (its orgs were absent, weight 0, so any value would be
+            # inert — zeros keep the artifact readable)
+            group_params.append(treedef.unflatten([
+                jnp.concatenate([
+                    jnp.zeros((t_old,) + jnp.asarray(b).shape[1:],
+                              jnp.asarray(b).dtype), jnp.asarray(b)],
+                    axis=0)
+                for b in leaves_new]))
+            continue
         # concatenate leaf-by-leaf in flatten order rather than with a
         # two-tree tree_map: a disk-loaded artifact holds tuples as lists
         # (the self-describing npz form), which flatten to the same leaf
         # sequence but not the same treedef as the fresh fit's params
-        leaves_new, treedef = jax.tree_util.tree_flatten(
-            new.group_params[gi])
         leaves_old = jax.tree_util.tree_leaves(art.group_params[gi])
         if len(leaves_old) != len(leaves_new):
             raise ValueError(
                 f"resumed group {gi} params have {len(leaves_new)} leaves, "
                 f"the artifact's have {len(leaves_old)} — the model "
                 f"implementation changed since the artifact was saved")
-        group_params.append(treedef.unflatten([
-            jnp.concatenate([jnp.asarray(a), jnp.asarray(b)], axis=0)
-            for a, b in zip(leaves_old, leaves_new)]))
+        lanes_added = g.size - old_sizes[gi]
+        stitched = []
+        for a, b in zip(leaves_old, leaves_new):
+            a = jnp.asarray(a)
+            if lanes_added:
+                # joiners' lanes over the completed rounds: exact zeros
+                a = jnp.pad(a, ((0, 0), (0, lanes_added))
+                            + ((0, 0),) * (a.ndim - 2))
+            stitched.append(jnp.concatenate([a, jnp.asarray(b)], axis=0))
+        group_params.append(treedef.unflatten(stitched))
     new.etas = list(art.etas) + list(new.etas)
-    new.weights = ([jnp.asarray(w) for w in art.weights]
-                   + list(new.weights))
+    old_w = [jnp.asarray(w) for w in art.weights]
+    if growth is not None:
+        old_w = [jnp.pad(w, (0, m_new - growth["m_old"])) for w in old_w]
+    new.weights = old_w + list(new.weights)
     new.history = hist
     new.group_params = group_params
     if plan.n_groups == 1 and not plan.has_dms:
         new.stacked_params = group_params[0]
+    # stitched membership ledger: recorded history (joiners absent) in
+    # front of the executed rows; stays None only when no membership story
+    # exists on either side
+    new_rows = new.membership
+    if growth is not None or art.membership is not None \
+            or new_rows is not None:
+        m_old = growth["m_old"] if growth is not None else m_new
+        old_rows = np.asarray(
+            art.membership if art.membership is not None
+            else np.ones((t_old, m_old), bool), bool)
+        full = np.zeros((t_old, m_new), bool)
+        full[:, :m_old] = old_rows
+        exec_rows = np.asarray(
+            new_rows if new_rows is not None
+            else np.ones((len(new.etas) - t_old, m_new), bool), bool)
+        new.membership = np.vstack([full, exec_rows]).tolist()
     return new
 
 
-def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
-    """Reference interpreter-order engine (the conformance oracle)."""
+def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics,
+                membership=None) -> GALResult:
+    """Reference interpreter-order engine (the conformance oracle).
+
+    ``membership`` is the resolved bool (rounds, M) schedule or None. The
+    oracle mirrors the compiled engines' membership semantics exactly:
+    every org still runs its local fit each round (fresh-fit params stay
+    round-aligned and the RNG chain stays org-independent) but an absent
+    org's round is DEAD — exact-zero assistance weight, no ledger bytes,
+    and for DMS orgs a skipped refit with a zero head in that round's
+    slot (``Organization.fit_round(live=False)``)."""
     n = y.shape[0]
     k = y.shape[-1]
     f0 = loss.init_prediction(y)
     f_train = jnp.broadcast_to(f0, (n, k))
     alice_loss = lq_loss(config.alice_q)
+    org_ids = jnp.asarray([org.index for org in orgs], jnp.uint32)
 
     result = GALResult(orgs=orgs, loss=loss, f0=f0, config=config)
     hist = result.history
@@ -662,15 +842,22 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
     # simulated per-round communication + model-memory ledgers (Table-14
     # convention, same formulas as the fused engines) — appended per
     # EXECUTED round so early stopping trims them like the fused engines do
-    bcast_b, gather_b = gal_round_bytes(
-        n, k, len(orgs),
-        [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()])
-    memories = gal_model_memories(config.rounds, [org.dms for org in orgs])
+    eval_ns = [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()]
+    if membership is None:
+        bcast_b, gather_b = gal_round_bytes(n, k, len(orgs), eval_ns)
+        bcast_l = gather_l = None
+    else:
+        from repro.core.membership import membership_comm_ledger
+        bcast_l, gather_l = membership_comm_ledger(membership, n, k,
+                                                   eval_ns)
+    memories = gal_model_memories(config.rounds, [org.dms for org in orgs],
+                                  membership=membership)
     hist["comm_broadcast_bytes"] = []
     hist["comm_gather_bytes"] = []
     hist["model_memories"] = []
 
     for t in range(config.rounds):
+        row = None if membership is None else membership[t]
         rng, k_round = jax.random.split(rng)
         # 1. pseudo-residual
         residual = loss.residual(y, f_train)
@@ -681,18 +868,21 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
         )
         # 3. parallel local fits
         preds = jnp.stack([
-            org.fit_round(jax.random.fold_in(k_round, org.index), r_bcast)
-            for org in orgs
+            org.fit_round(jax.random.fold_in(k_round, org.index), r_bcast,
+                          live=bool(row[m]) if row is not None else True)
+            for m, org in enumerate(orgs)
         ])                                                    # (M, N, K)
-        # 4. gradient assistance weights
+        # 4. gradient assistance weights (masked over this round's live orgs)
+        mask = None if row is None else jnp.asarray(row)
         if config.use_weights and len(orgs) > 1:
             w = fit_weights(
                 jax.random.fold_in(k_round, 29), residual, preds, alice_loss,
                 epochs=config.weight_epochs, lr=config.weight_lr,
                 weight_decay=config.weight_decay,
+                mask=mask, org_ids=org_ids,
             )
         else:
-            w = uniform_weights(len(orgs))
+            w = uniform_weights(len(orgs), mask=mask)
         direction = jnp.einsum("m,mnk->nk", w, preds)
         # 5. line-search the gradient assisted learning rate
         eta = line_search(
@@ -704,8 +894,10 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
         result.etas.append(float(eta))
         result.weights.append(w)
         hist["train_loss"].append(float(loss(y, f_train)))
-        hist["comm_broadcast_bytes"].append(bcast_b)
-        hist["comm_gather_bytes"].append(gather_b)
+        hist["comm_broadcast_bytes"].append(
+            bcast_b if membership is None else bcast_l[t])
+        hist["comm_gather_bytes"].append(
+            gather_b if membership is None else gather_l[t])
         hist["model_memories"].append(memories[t])
         if eval_sets:
             for name, (xs_e, y_e) in eval_sets.items():
@@ -723,4 +915,7 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics) -> GALResult:
         if (config.eta_stop_threshold > 0.0
                 and abs(float(eta)) < config.eta_stop_threshold):
             break
+    if membership is not None:
+        result.membership = np.asarray(
+            membership[:len(result.etas)], bool).tolist()
     return result

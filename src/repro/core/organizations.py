@@ -35,6 +35,7 @@ class Organization:
     _dms_extractor: Any = None
     _dms_heads: List[Any] = field(default_factory=list)
     _residual_history: List[jnp.ndarray] = field(default_factory=list)
+    _live_slots: List[bool] = field(default_factory=list)
 
     # ------------------------------------------------------------------ fit
     def reset_round_state(self) -> None:
@@ -57,12 +58,26 @@ class Organization:
         self._dms_extractor = None
         self._dms_heads = []
         self._residual_history = []
+        self._live_slots = []
 
-    def fit_round(self, rng: jax.Array, residual: jnp.ndarray) -> jnp.ndarray:
+    def fit_round(self, rng: jax.Array, residual: jnp.ndarray,
+                  live: bool = True) -> jnp.ndarray:
         """Fit this round's local model to the broadcast pseudo-residual and
-        return the fitted values f_m^t(x_m) on the training set."""
+        return the fitted values f_m^t(x_m) on the training set.
+
+        ``live`` is this org's membership bit for the round
+        (``core.membership``): the caller still invokes ``fit_round`` every
+        round so the params list and RNG chain stay round-aligned, but an
+        absent round is DEAD downstream — the engine pins its assistance
+        weight to exactly 0.0, so the fresh-fit values returned here never
+        reach the ensemble. A Deep-Model-Sharing org additionally skips the
+        joint refit when absent: round ``t`` keeps a zero head forever (the
+        dead slot is masked out of every later refit objective) while the
+        broadcast residual still enters the history buffer."""
         if self.dms:
-            fitted = self._fit_round_dms(rng, residual)
+            fitted = self._fit_round_dms(rng, residual, live)
+            if not live:
+                return fitted
         else:
             params = self.model.fit(rng, self.x_train, residual, self.local_loss)
             self._round_params.append(params)
@@ -73,19 +88,37 @@ class Organization:
             )
         return fitted
 
-    def _fit_round_dms(self, rng: jax.Array, residual: jnp.ndarray) -> jnp.ndarray:
-        """Jointly refit shared extractor + all per-round heads on r^{1:t}."""
+    def _fit_round_dms(self, rng: jax.Array, residual: jnp.ndarray,
+                       live: bool = True) -> jnp.ndarray:
+        """Jointly refit shared extractor + the attended per-round heads on
+        the attended slice of r^{1:t} (all of it when every round was
+        attended — the membership-free objective unchanged)."""
         self._residual_history.append(residual)
         t = len(self._residual_history)
         k_out = residual.shape[-1]
         if self._dms_extractor is None:
+            # init at the FIRST round regardless of attendance — the fused
+            # engine builds the extractor stack from round 0's org keys
+            # before the scan, so a late joiner still draws round 0's init
             full = self.model.init(rng, self.x_train, k_out)
             self._dms_extractor = {k: v for k, v in full.items() if k != "head"}
+        if not live:
+            # dead slot: zero head, no refit, nothing for the ensemble
+            spec = jax.eval_shape(
+                lambda kk: self.model.init_head(kk, k_out),
+                jax.random.PRNGKey(0))
+            self._dms_heads.append(jax.tree_util.tree_map(
+                lambda s: jnp.zeros(s.shape, s.dtype), spec))
+            self._live_slots.append(False)
+            return jnp.zeros_like(residual)
         self._dms_heads.append(self.model.init_head(jax.random.fold_in(rng, t), k_out))
+        self._live_slots.append(True)
 
-        extractor, heads = self._dms_extractor, list(self._dms_heads)
+        live_idx = [s for s, lv in enumerate(self._live_slots) if lv]
+        extractor = self._dms_extractor
+        heads = [self._dms_heads[s] for s in live_idx]
         model, x, loss = self.model, self.x_train, self.local_loss
-        r_stack = jnp.stack(self._residual_history)     # (t, N, K)
+        r_stack = jnp.stack([self._residual_history[s] for s in live_idx])
 
         def objective(params):
             # mean over rounds of the per-round local loss — the per-slot
@@ -111,7 +144,8 @@ class Organization:
 
         (params, _), _ = jax.lax.scan(step, (params, state), None, length=epochs)
         self._dms_extractor, new_heads = params
-        self._dms_heads = list(new_heads)
+        for s, h in zip(live_idx, new_heads):
+            self._dms_heads[s] = h
         feats = model.features({**self._dms_extractor, "head": None}, x)
         return model.apply_head(self._dms_heads[-1], feats)
 

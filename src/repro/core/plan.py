@@ -392,6 +392,81 @@ def plan_mismatch(plan: ExecutionPlan, manifest: Dict, model_spec,
     return None
 
 
+def plan_growth_mismatch(plan: ExecutionPlan, manifest: Dict, model_spec,
+                         loss_spec) -> Optional[str]:
+    """The mid-fit-join relaxation of ``plan_mismatch``: None when the new
+    org set is a *compatible growth* of the artifact's — every fitted org
+    keeps its position, id, model, loss, noise and DMS flag, and the extra
+    orgs only ever APPEND (new members at the tail of an existing fresh-fit
+    group, or entirely new fresh-fit groups after the old ones). Under that
+    shape the restored round-scan carry stays valid: the ensemble state is
+    org-independent, old group params zero-pad cleanly along the org axis,
+    and joiners enter with zero weight history. Returns a reason string
+    naming the first violation otherwise.
+
+    Deep-Model-Sharing groups cannot grow: their extractor/head carry is
+    shaped by the member count, so a joiner would invalidate the restored
+    state. New orgs must occupy positions >= the fitted org count (old
+    positions are the carry's coordinates) with org ids disjoint from the
+    fitted ids (ids seed the per-org RNG legs)."""
+    mine = plan_to_manifest(plan, model_spec, loss_spec)["groups"]
+    theirs = manifest["groups"]
+    m_old = sum(len(g["org_ids"]) for g in theirs)
+    m_new = sum(len(g["org_ids"]) for g in mine)
+    if m_new <= m_old:
+        return (f"not a growth: artifact has {m_old} organization(s), "
+                f"the supplied set has {m_new}")
+    if len(mine) < len(theirs):
+        return (f"artifact plan has {len(theirs)} group(s), the supplied "
+                f"organizations plan into only {len(mine)}")
+    old_ids = {i for g in theirs for i in g["org_ids"]}
+    for gi, b in enumerate(theirs):
+        a = mine[gi]
+        for field_ in ("model", "local_loss", "noise_sigma", "dms"):
+            if a[field_] != b[field_]:
+                return (f"group {gi} {field_} mismatch: artifact has "
+                        f"{b[field_]!r}, the supplied organizations have "
+                        f"{a[field_]!r}")
+        k = len(b["org_ids"])
+        if (a["indices"][:k] != b["indices"]
+                or a["org_ids"][:k] != b["org_ids"]):
+            return (f"group {gi} does not keep the artifact's members as a "
+                    f"prefix: artifact has indices {b['indices']!r} / ids "
+                    f"{b['org_ids']!r}, the supplied organizations have "
+                    f"{a['indices']!r} / {a['org_ids']!r}")
+        if len(a["org_ids"]) > k:
+            if b["dms"]:
+                return (f"group {gi} uses Deep Model Sharing and cannot "
+                        f"grow: its shared extractor/head carry is shaped "
+                        f"by the fitted member count")
+            bad_pos = [i for i in a["indices"][k:] if i < m_old]
+            if bad_pos:
+                return (f"group {gi} inserts joiner(s) at fitted org "
+                        f"position(s) {bad_pos} (< {m_old}); joiners must "
+                        f"occupy new positions at the tail of the org list")
+            clash = [i for i in a["org_ids"][k:] if i in old_ids]
+            if clash:
+                return (f"group {gi} joiner org id(s) {clash} collide with "
+                        f"fitted org ids (ids seed the per-org RNG legs and "
+                        f"must be unique)")
+    for gi in range(len(theirs), len(mine)):
+        a = mine[gi]
+        if a["dms"]:
+            return (f"new group {gi} uses Deep Model Sharing; joining orgs "
+                    f"must fresh-fit (DMS needs the full round history)")
+        bad_pos = [i for i in a["indices"] if i < m_old]
+        if bad_pos:
+            return (f"new group {gi} claims fitted org position(s) "
+                    f"{bad_pos} (< {m_old}); joiners must occupy new "
+                    f"positions at the tail of the org list")
+        clash = [i for i in a["org_ids"] if i in old_ids]
+        if clash:
+            return (f"new group {gi} org id(s) {clash} collide with fitted "
+                    f"org ids (ids seed the per-org RNG legs and must be "
+                    f"unique)")
+    return None
+
+
 def plan_lm_orgs(orgs: Sequence[Any]) -> ExecutionPlan:
     """The same grouping for LM-scale organizations (``core.gal_lm``):
     groups keyed by (architecture config, local lr). The fused LM path

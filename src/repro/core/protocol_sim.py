@@ -52,19 +52,36 @@ def gal_round_bytes(n: int, k: int, m: int, eval_ns=(),
     return broadcast, gathered
 
 
-def gal_model_memories(rounds: int, dms_flags) -> list:
+def gal_model_memories(rounds: int, dms_flags, membership=None) -> list:
     """Per-round live model copies (paper Table 14's computation-space row,
     Sec. 5 Deep Model Sharing): after round t+1, a fresh-fit organization
     holds t+1 full models (one per round) while a DMS organization holds
     ONE shared extractor — its per-round heads are the lightweight Tx
     saving. ``dms_flags`` is the per-org DMS flag list in org order.
 
+    ``membership`` is an optional bool (rounds, M) attendance schedule
+    (see core/membership.py): a fresh-fit org only accrues a model in the
+    rounds it attends, and a DMS org's shared extractor exists from its
+    first attended round onward. An org that never shows up holds nothing,
+    so a fully-masked org leaves the ledger identical to the reduced org
+    set's — while an all-live schedule reproduces the static counts.
+
     This is the one source of ``history["model_memories"]`` on every
     engine; for an all-DMS (resp. no-DMS) org set the final entry equals
     ``gal_cost(..., dms=True).model_memories`` (resp. ``dms=False``)."""
-    m_dms = sum(1 for f in dms_flags if f)
-    m_fresh = len(dms_flags) - m_dms
-    return [m_dms + (t + 1) * m_fresh for t in range(rounds)]
+    if membership is None:
+        m_dms = sum(1 for f in dms_flags if f)
+        m_fresh = len(dms_flags) - m_dms
+        return [m_dms + (t + 1) * m_fresh for t in range(rounds)]
+    out = []
+    attended = [0] * len(dms_flags)
+    for t in range(rounds):
+        for j, flag in enumerate(dms_flags):
+            if membership[t][j]:
+                attended[j] += 1
+        out.append(sum((1 if dms else att) if att else 0
+                       for dms, att in zip(dms_flags, attended)))
+    return out
 
 
 def gal_cost(n: int, k: int, m: int, rounds: int, dtype_bytes: int = 4,

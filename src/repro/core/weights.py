@@ -3,10 +3,18 @@
 Alice solves  w-hat = argmin_{w in simplex}  E_N ell_1(r, sum_m w_m f_m)
 with the simplex enforced by a softmax parametrization and optimized with
 Adam (paper Table 9: lr 1e-1, weight decay 5e-4, 100 epochs).
+
+Dynamic membership (org dropout / stragglers / mid-fit joins) enters here
+as a per-org ``mask``: absent orgs are pinned to an EXACT zero weight at
+every Adam step and receive zero gradient, so the live orgs' optimization
+trajectory is identical to solving the reduced problem over the live set
+alone. Combined with per-org-id theta seeding (``org_ids``), this is what
+makes a masked fit bitwise-equal to a from-scratch fit of the reduced org
+set (the counterfactual parity pinned by tests/test_membership.py).
 """
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
@@ -14,9 +22,27 @@ import jax.numpy as jnp
 from repro.optim.optimizers import adam, apply_updates
 
 
+def _masked_softmax(theta: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """softmax over the live entries only; masked entries are EXACT zeros.
+
+    The shift is a stop_gradient max over live entries, so live thetas see
+    the same gradients they would in a reduced-size softmax, and masked
+    thetas see exactly zero gradient (their ``where`` branch is constant).
+    With a single live entry the result is exp(0)/exp(0) == 1.0 exactly,
+    matching ``uniform_weights(1)`` bitwise.
+    """
+    neg = jnp.asarray(-jnp.inf, theta.dtype)
+    shift = jax.lax.stop_gradient(
+        jnp.max(jnp.where(mask, theta, neg)))
+    e = jnp.where(mask, jnp.exp(theta - shift), 0.0)
+    return e / jnp.sum(e)
+
+
 def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
                 loss: Callable, epochs: int = 100, lr: float = 0.1,
-                weight_decay: float = 5e-4) -> jnp.ndarray:
+                weight_decay: float = 5e-4,
+                mask: Optional[jnp.ndarray] = None,
+                org_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """preds: (M, N, K) stacked org outputs; returns w in the M-simplex.
 
     Pure lax-scan Adam: traces once inside the fused engine's round step.
@@ -27,12 +53,25 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
     uniform-weights start. Every engine threads ``fold_in(k_round, 29)``
     here, so the round key fully determines the weight fit (the step-4 leg
     of the engines' RNG-discipline parity; pinned by
-    tests/test_weights.py)."""
+    tests/test_weights.py). Each org's logit is drawn from
+    ``fold_in(rng, org_id)`` — keyed by org IDENTITY, not position — so a
+    reduced org set draws the same per-org jitter as the full set.
+
+    ``mask`` is the (M,) membership row for this round (None = all live):
+    masked orgs get weight exactly 0.0 and contribute nothing — not even
+    fp association noise — to the objective or to any live org's gradient.
+    """
     m = preds.shape[0]
-    theta0 = 0.01 * jax.random.normal(rng, (m,), jnp.float32)
+    if org_ids is None:
+        org_ids = jnp.arange(m, dtype=jnp.uint32)
+    if mask is None:
+        mask = jnp.ones((m,), bool)
+    keys = jax.vmap(lambda i: jax.random.fold_in(rng, i))(org_ids)
+    theta0 = 0.01 * jax.vmap(
+        lambda k: jax.random.normal(k, (), jnp.float32))(keys)
 
     def objective(theta):
-        w = jax.nn.softmax(theta)
+        w = _masked_softmax(theta, mask)
         combined = jnp.einsum("m,mnk->nk", w, preds)
         return loss(residual, combined)
 
@@ -46,9 +85,15 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
         return (apply_updates(theta, upd), st), None
 
     (theta, _), _ = jax.lax.scan(step, (theta0, state), None, length=epochs)
-    return jax.nn.softmax(theta)
+    return _masked_softmax(theta, mask)
 
 
-def uniform_weights(m: int) -> jnp.ndarray:
-    """Direct-average ablation (Table 6, 'Weight = x')."""
-    return jnp.full((m,), 1.0 / m)
+def uniform_weights(m: int, mask: Optional[jnp.ndarray] = None
+                    ) -> jnp.ndarray:
+    """Direct-average ablation (Table 6, 'Weight = x'); with a membership
+    ``mask``, the average renormalizes over the live orgs (1/|live| each,
+    exact zeros elsewhere)."""
+    if mask is None:
+        return jnp.full((m,), 1.0 / m)
+    maskf = mask.astype(jnp.float32)
+    return maskf / jnp.sum(maskf)

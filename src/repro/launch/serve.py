@@ -126,12 +126,32 @@ def gal_ensemble_serve(args) -> None:
         else:
             models = Linear()
         t0 = time.time()
-        res = gal.fit(key, make_orgs(xs, models, dms=dms), train.y,
-                      get_loss("mse"), GALConfig(rounds=args.rounds,
-                                                 engine=engine))
+        orgs = make_orgs(xs, models, dms=dms)
+        cfg = GALConfig(rounds=args.rounds, engine=engine)
+        res = gal.fit(key, orgs, train.y, get_loss("mse"), cfg)
         dt_fit = time.time() - t0
         print(f"gal-ensemble COLD start: fit {args.rounds} rounds in "
               f"{dt_fit:.2f} s (engine={res.engine})")
+        if args.contributions:
+            from repro.core.contrib import leave_one_out, truncated_shapley
+            cut = args.rounds // 2
+            t0 = time.time()
+            if args.contributions == "shapley":
+                rep = truncated_shapley(key, orgs, train.y, get_loss("mse"),
+                                        cfg, t0=cut, full=res)
+            else:
+                rep = leave_one_out(key, orgs, train.y, get_loss("mse"),
+                                    cfg, t0=cut, full=res)
+            dt_c = time.time() - t0
+            print(f"gal-ensemble contributivity ({rep['method']}, "
+                  f"value={rep['value']} over rounds {cut}..{args.rounds}, "
+                  f"{rep['refits']} counterfactual refits resumed from the "
+                  f"round-{cut} carry, {dt_c:.2f} s):")
+            print(f"  v_full={rep['v_full']:.4f}  v_empty={rep['v_empty']:.4f}")
+            for oid, s in zip(rep["org_ids"], rep["scores"]):
+                bar = "#" * max(0, min(40, int(
+                    40 * s / max(abs(max(rep["scores"], key=abs)), 1e-12))))
+                print(f"  org {oid}: {s:+12.4f}  {bar}")
         if args.save:
             from repro.checkpoint import save_artifact
             t0 = time.time()
@@ -244,12 +264,20 @@ def main() -> None:
                          "artifact (fit once, serve forever); the jitted "
                          "predict path is compiled once and cached across "
                          "requests")
+    ap.add_argument("--contributions", default=None,
+                    choices=("loo", "shapley"),
+                    help="--gal-ensemble: after the cold fit, score each "
+                         "org's contributivity (leave-one-out or truncated "
+                         "Shapley) via counterfactual refits resumed from "
+                         "the mid-fit carry, and print the per-org table")
     args = ap.parse_args()
 
     if args.load:
         conflicts = [flag for flag, on in (("--save", args.save),
                                            ("--hetero", args.hetero),
-                                           ("--dms", args.dms)) if on]
+                                           ("--dms", args.dms),
+                                           ("--contributions",
+                                            args.contributions)) if on]
         if conflicts:
             ap.error(f"--load serves an already-fitted artifact; "
                      f"{'/'.join(conflicts)} choose fit-time behavior — "

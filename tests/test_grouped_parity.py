@@ -51,9 +51,13 @@ def _parity(res_a, res_b, cols=("train_loss",), predict=None):
         np.testing.assert_allclose(res_a.history[col], res_b.history[col],
                                    rtol=1e-3, atol=1e-3, err_msg=col)
     if predict is not None:
+        # predictions compound the per-round eta/weight drift through every
+        # org model's vmap-vs-loop float divergence (batched vs single
+        # kernel solves, stump split ties), so they get one tolerance tier
+        # more than the histories
         np.testing.assert_allclose(np.asarray(res_a.predict(predict)),
                                    np.asarray(res_b.predict(predict)),
-                                   rtol=1e-3, atol=1e-3)
+                                   rtol=1e-3, atol=5e-3)
 
 
 def test_hetero_gb_svm_mix_parity(rng_np, key):

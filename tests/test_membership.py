@@ -1,0 +1,362 @@
+"""Dynamic-membership conformance: dropout, stragglers, and mid-fit joins.
+
+The counterfactual harness this PR pins:
+
+* a membership-scheduled fit matches the Python oracle on every engine
+  that can run it — etas, renormalized weights (absent orgs EXACTLY 0.0),
+  every history column including the per-round communication/memory
+  ledgers, the recorded membership matrix, and predict at every prefix;
+* a fit with org j masked out of every round is BITWISE equal to fitting
+  the reduced org set without j — the counterfactual parity that makes
+  ``repro.core.contrib`` exact;
+* a mid-fit join (resume onto a grown org set) is BITWISE equal to a
+  fresh fit of the grown set whose schedule masks the joiners before the
+  join round — and the leave-one-out refit-from-carry shortcut is BITWISE
+  equal to the same counterfactual fit from scratch;
+* the fault-injection knobs (``GALConfig.straggler_sim``) are seeded,
+  deterministic, never produce an empty round, and compose (AND) with an
+  explicit schedule;
+* schedules that cannot run (wrong shape, non-boolean, empty rounds) and
+  growths that cannot resume (DMS joins, position/id collisions,
+  straggler_sim across a growth) raise up front with the specific reason.
+"""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.membership import (membership_comm_ledger,
+                                   resolve_membership, straggler_schedule)
+from repro.core.organizations import make_orgs
+from repro.core.protocol_sim import gal_model_memories, gal_round_bytes
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.launch.mesh import org_mesh_eligible
+from repro.models.zoo import KernelRidge, Linear, MLP, StumpBoost
+
+M = 4
+ROUNDS = 3
+
+# org 2 skips round 1, org 0 skips round 2 — exercises dropout mid-fit
+# and a round where the weight fit renormalizes over 3 live orgs
+SCHED = np.ones((ROUNDS, M), bool)
+SCHED[1, 2] = False
+SCHED[2, 0] = False
+
+
+def _data():
+    rng_np = np.random.default_rng(7)
+    ds = make_regression(rng_np, n=160, d=12)
+    tr, te = train_test_split(ds, rng_np)
+    return (split_features(tr.x, M), tr.y,
+            split_features(te.x, M), te.y)
+
+
+SCENARIOS = {
+    "dropout_homog": dict(
+        orgs=lambda xs: make_orgs(xs, Linear()),
+        cfg={}, membership=SCHED, extra_engines=("scan", "shard")),
+    "dropout_hetero": dict(
+        orgs=lambda xs: make_orgs(
+            xs, [StumpBoost(n_stumps=8) if i % 2 == 0 else KernelRidge()
+                 for i in range(M)]),
+        cfg={}, membership=SCHED, extra_engines=()),
+    "dropout_dms": dict(
+        orgs=lambda xs: make_orgs(xs, MLP((8,), epochs=5), dms=True),
+        cfg={}, membership=SCHED, extra_engines=()),
+    "straggler": dict(
+        orgs=lambda xs: make_orgs(xs, Linear()),
+        cfg={"straggler_sim": 0.35, "straggler_seed": 3},
+        membership=None, extra_engines=("scan", "shard")),
+}
+
+_CELLS = [(s, e) for s, spec in SCENARIOS.items()
+          for e in ("grouped",) + spec["extra_engines"]]
+
+_ORACLE_CACHE = {}
+
+
+def _fit(scenario, engine, key):
+    xs, y, xs_te, y_te = _data()
+    spec = SCENARIOS[scenario]
+    cfg = GALConfig(**{"rounds": ROUNDS, "engine": engine, **spec["cfg"]})
+    return gal.fit(key, spec["orgs"](xs), y, get_loss("mse"), cfg,
+                   eval_sets={"test": (xs_te, y_te)}, metrics=("mad",),
+                   membership=spec["membership"])
+
+
+def _oracle(scenario, key):
+    if scenario not in _ORACLE_CACHE:
+        _ORACLE_CACHE[scenario] = _fit(scenario, "python", key)
+    return _ORACLE_CACHE[scenario]
+
+
+def _expected_sched(scenario):
+    spec = SCENARIOS[scenario]
+    return resolve_membership(spec["membership"],
+                              spec["cfg"].get("straggler_sim"),
+                              spec["cfg"].get("straggler_seed", 0),
+                              ROUNDS, M)
+
+
+@pytest.mark.parametrize("scenario,engine", _CELLS,
+                         ids=[f"{s}-{e}" for s, e in _CELLS])
+def test_membership_engine_matches_python_oracle(key, scenario, engine):
+    """The full conformance contract of test_conformance.py, under a
+    membership schedule: every engine agrees with the oracle AND pins the
+    membership-specific quantities (exact-zero weights for absent orgs,
+    the reduced per-round ledgers, the recorded schedule)."""
+    if engine == "shard" and not org_mesh_eligible(M):
+        pytest.skip(f"no org mesh for {M} orgs on "
+                    f"{len(jnp.zeros(1).devices())} device(s) "
+                    f"(run under REPRO_FORCE_DEVICES={M})")
+    res_py = _oracle(scenario, key)
+    res = _fit(scenario, engine, key)
+    sched = _expected_sched(scenario)
+    assert res.engine == engine
+
+    assert res.rounds == res_py.rounds
+    np.testing.assert_allclose(res.etas, res_py.etas, rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.stack(res.weights),
+                               np.stack(res_py.weights), atol=1e-3)
+    # absent orgs carry weight EXACTLY 0.0; live weights renormalize to 1
+    for t in range(res.rounds):
+        w = np.asarray(res.weights[t])
+        assert (w[~sched[t]] == 0.0).all(), (scenario, engine, t)
+        np.testing.assert_allclose(w.sum(), 1.0, rtol=1e-5)
+
+    # recorded schedule: executed rows of the resolved matrix, both engines
+    assert res.membership == sched[:res.rounds].tolist()
+    assert res.membership == res_py.membership
+
+    assert set(res.history) == set(res_py.history)
+    for col in res_py.history:
+        if col.startswith("comm_") or col == "model_memories":
+            assert res.history[col] == res_py.history[col], col
+            assert all(isinstance(v, int) for v in res.history[col]), col
+        else:
+            np.testing.assert_allclose(res.history[col],
+                                       res_py.history[col],
+                                       rtol=1e-3, atol=1e-3, err_msg=col)
+    # the comm ledger shrinks with the live count, per round, exactly
+    n = 160 - 160 // 5  # train rows after the 1/5 test split
+    exp_b, exp_g = membership_comm_ledger(sched, n, 1, eval_ns=(160 // 5,))
+    assert res.history["comm_broadcast_bytes"] == exp_b[:res.rounds]
+    assert res.history["comm_gather_bytes"] == exp_g[:res.rounds]
+
+    xs, _, xs_te, _ = _data()
+    for t in range(res_py.rounds + 1):
+        np.testing.assert_allclose(
+            np.asarray(res.predict(xs_te, rounds=t)),
+            np.asarray(res_py.predict(xs_te, rounds=t)),
+            rtol=1e-3, atol=1e-3,
+            err_msg=f"{scenario}/{engine} predict(rounds={t})")
+
+
+# ---------------------------------------------------------- bitwise parity
+
+@pytest.mark.parametrize("engine", ("scan", "grouped"))
+def test_masked_equals_reduced_bitwise(key, engine):
+    """THE counterfactual pin: masking org 3 out of every round is bitwise
+    identical to fitting only orgs 0..2 — etas, weights over the live
+    orgs, the whole train-loss curve, and predict. (No shard cell: a
+    3-org reduced mesh cannot exist alongside the 4-org one in-process.)"""
+    xs, y, xs_te, _ = _data()
+    cfg = GALConfig(rounds=ROUNDS, engine=engine)
+    sched = np.ones((ROUNDS, M), bool)
+    sched[:, 3] = False
+    r4 = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"), cfg,
+                 membership=sched)
+    r3 = gal.fit(key, make_orgs(xs[:3], Linear()), y, get_loss("mse"), cfg)
+    np.testing.assert_array_equal(np.asarray(r4.etas), np.asarray(r3.etas))
+    for t in range(ROUNDS):
+        w4, w3 = np.asarray(r4.weights[t]), np.asarray(r3.weights[t])
+        np.testing.assert_array_equal(w4[:3], w3)
+        assert w4[3] == 0.0
+    np.testing.assert_array_equal(np.asarray(r4.history["train_loss"]),
+                                  np.asarray(r3.history["train_loss"]))
+    np.testing.assert_array_equal(np.asarray(r4.predict(xs_te)),
+                                  np.asarray(r3.predict(xs_te[:3])))
+    # and the ledger equals the reduced org set's static ledger
+    n = y.shape[0]
+    b3, g3 = gal_round_bytes(n, 1, 3)
+    assert r4.history["comm_broadcast_bytes"] == [b3] * ROUNDS
+    assert r4.history["comm_gather_bytes"] == [g3] * ROUNDS
+    assert (r4.history["model_memories"]
+            == gal_model_memories(ROUNDS, [False] * 3))
+
+
+@pytest.mark.parametrize("engine", ("scan", "grouped"))
+def test_join_equals_fresh_fit_with_membership(key, engine):
+    """Mid-fit join: resume a 3-org collaboration onto a 4-org set and get
+    bitwise the fresh 4-org fit whose schedule masks the joiner before the
+    join round — zeroed weight history for the joiner included."""
+    xs, y, xs_te, _ = _data()
+    t_cut, total = 2, 4
+    part = gal.fit(key, make_orgs(xs[:3], Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=t_cut, engine=engine))
+    grown = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                    GALConfig(rounds=total, engine=engine),
+                    resume_from=part)
+    sched = np.ones((total, M), bool)
+    sched[:t_cut, 3] = False
+    fresh = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                    GALConfig(rounds=total, engine=engine),
+                    membership=sched)
+    np.testing.assert_array_equal(np.asarray(grown.etas),
+                                  np.asarray(fresh.etas))
+    np.testing.assert_array_equal(np.stack(grown.weights),
+                                  np.stack(fresh.weights))
+    for t in range(t_cut):                 # joiner's backfilled history
+        assert np.asarray(grown.weights[t])[3] == 0.0
+    assert grown.membership == sched.tolist() == fresh.membership
+    for col in grown.history:
+        np.testing.assert_allclose(grown.history[col], fresh.history[col],
+                                   rtol=0, atol=0, err_msg=col)
+    np.testing.assert_array_equal(np.asarray(grown.predict(xs_te)),
+                                  np.asarray(fresh.predict(xs_te)))
+
+
+def test_loo_resume_matches_scratch_bitwise(key):
+    """The contributivity shortcut: a leave-one-out counterfactual resumed
+    from the shared round-t0 carry is draw-for-draw identical to running
+    the same masked fit from scratch."""
+    xs, y, _, _ = _data()
+    t0, total = 2, 4
+    base = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=t0, engine="scan"))
+    sched = np.ones((total, M), bool)
+    sched[t0:, 1] = False                  # org 1 leaves at the cut
+    resumed = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                      GALConfig(rounds=total, engine="scan"),
+                      membership=sched, resume_from=base)
+    scratch = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                      GALConfig(rounds=total, engine="scan"),
+                      membership=sched)
+    np.testing.assert_array_equal(np.asarray(resumed.etas),
+                                  np.asarray(scratch.etas))
+    np.testing.assert_array_equal(np.stack(resumed.weights),
+                                  np.stack(scratch.weights))
+    np.testing.assert_array_equal(
+        np.asarray(resumed.history["train_loss"]),
+        np.asarray(scratch.history["train_loss"]))
+    assert resumed.membership == scratch.membership
+
+
+# ------------------------------------------------------- schedules & knobs
+
+def test_straggler_schedule_deterministic_and_never_empty():
+    a = straggler_schedule(50, 3, 0.9, seed=11)
+    b = straggler_schedule(50, 3, 0.9, seed=11)
+    np.testing.assert_array_equal(a, b)
+    assert a.shape == (50, 3) and a.dtype == np.bool_
+    assert a.any(axis=1).all()             # repair: no empty rounds
+    assert not straggler_schedule(50, 3, 0.9, seed=12).tolist() == a.tolist()
+    with pytest.raises(ValueError, match="straggler_sim"):
+        straggler_schedule(5, 3, 1.0)
+    with pytest.raises(ValueError, match="straggler_sim"):
+        straggler_schedule(5, 3, -0.1)
+
+
+def test_resolve_membership_validates_and_composes():
+    with pytest.raises(ValueError, match=r"shape \(rounds, M\)"):
+        resolve_membership(np.ones((2, 3), bool), None, 0, 3, 3)
+    with pytest.raises(ValueError, match="boolean / 0-1"):
+        resolve_membership(np.full((2, 2), 0.5), None, 0, 2, 2)
+    with pytest.raises(ValueError, match=r"round\(s\) \[1\]"):
+        resolve_membership(np.array([[1, 1], [0, 0]]), None, 0, 2, 2)
+    assert resolve_membership(None, None, 0, 3, 2) is None
+    assert resolve_membership(None, 0.0, 0, 3, 2) is None
+    # explicit schedule AND straggler draws compose
+    sched = np.ones((6, 2), bool)
+    sched[:, 1] = False
+    strag = straggler_schedule(6, 2, 0.5, seed=0)
+    if (sched & strag).any(axis=1).all():
+        out = resolve_membership(sched, 0.5, 0, 6, 2)
+        np.testing.assert_array_equal(out, sched & strag)
+
+
+def test_model_memories_membership_accrual():
+    """A fresh org accrues a copy per ATTENDED round; a DMS org holds one
+    extractor from its first attended round; a no-show holds nothing."""
+    sched = [[True, False, False], [True, True, False], [False, True, False]]
+    out = gal_model_memories(3, [False, True, False], membership=sched)
+    assert out == [1, 3, 3]
+    # all-live membership reproduces the static counts
+    ones = [[True] * 3] * 3
+    assert (gal_model_memories(3, [False, True, False], membership=ones)
+            == gal_model_memories(3, [False, True, False]))
+
+
+def test_fit_rejects_bad_schedules(key):
+    xs, y, _, _ = _data()
+    cfg = GALConfig(rounds=ROUNDS, engine="scan")
+    with pytest.raises(ValueError, match=r"shape \(rounds, M\)"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"), cfg,
+                membership=np.ones((ROUNDS + 1, M), bool))
+    empty = np.ones((ROUNDS, M), bool)
+    empty[1] = False
+    with pytest.raises(ValueError, match="no live org"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"), cfg,
+                membership=empty)
+
+
+# ----------------------------------------------------- artifacts & growth
+
+def test_artifact_roundtrips_membership(key, tmp_path):
+    from repro.checkpoint import load_artifact, save_artifact
+    xs, y, _, _ = _data()
+    res = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                  GALConfig(rounds=ROUNDS, engine="scan"),
+                  membership=SCHED)
+    art = load_artifact(save_artifact(res, tmp_path / "art"))
+    assert art.membership == res.membership == SCHED.tolist()
+    # membership-free artifacts stay membership-free
+    res0 = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=ROUNDS, engine="scan"))
+    art0 = load_artifact(save_artifact(res0, tmp_path / "art0"))
+    assert art0.membership is None
+
+
+def test_growth_resume_rejections(key):
+    xs, y, _, _ = _data()
+    part = gal.fit(key, make_orgs(xs[:3], Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=2, engine="scan"))
+    # straggler fault injection across a growth would retroactively change
+    # the (rounds, M) draw matrix
+    with pytest.raises(ValueError, match="straggler_sim"):
+        gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                GALConfig(rounds=4, engine="scan", straggler_sim=0.3),
+                resume_from=part)
+    # a shrunk org set is neither a match nor a growth
+    with pytest.raises(ValueError, match="not a growth"):
+        gal.fit(key, make_orgs(xs[:2], Linear()), y, get_loss("mse"),
+                GALConfig(rounds=4, engine="scan"), resume_from=part)
+    # DMS groups cannot grow: the extractor/head carry is member-shaped
+    dms_part = gal.fit(key, make_orgs(xs[:3], MLP((8,), epochs=5),
+                                      dms=True),
+                       y, get_loss("mse"),
+                       GALConfig(rounds=2, engine="grouped"))
+    with pytest.raises(ValueError, match="Deep Model Sharing"):
+        gal.fit(key, make_orgs(xs, MLP((8,), epochs=5), dms=True), y,
+                get_loss("mse"), GALConfig(rounds=4, engine="grouped"),
+                resume_from=dms_part)
+
+
+def test_grown_resume_roundtrips_as_artifact(key, tmp_path):
+    """grow -> save -> load -> predict: the stitched result (zero-padded
+    weights, joiner group params, membership ledger) is a first-class
+    artifact."""
+    from repro.checkpoint import load_artifact, save_artifact
+    xs, y, xs_te, _ = _data()
+    part = gal.fit(key, make_orgs(xs[:3], Linear()), y, get_loss("mse"),
+                   GALConfig(rounds=2, engine="scan"))
+    grown = gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"),
+                    GALConfig(rounds=4, engine="scan"), resume_from=part)
+    art = load_artifact(save_artifact(grown, tmp_path / "grown"))
+    assert art.membership == grown.membership
+    np.testing.assert_array_equal(np.asarray(art.predict(xs_te)),
+                                  np.asarray(grown.predict(xs_te)))
