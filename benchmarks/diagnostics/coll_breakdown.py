@@ -12,7 +12,7 @@ from collections import Counter
 from dataclasses import replace
 import jax
 from repro.configs import SHAPES, get_arch
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_device_mesh, production_mesh_spec
 from repro.launch import sharding as shd
 from repro.launch.specs import abstract_params, config_for_shape, train_batch_specs, serve_specs
 from repro.train.steps import make_train_step, make_serve_step
@@ -24,7 +24,7 @@ shape = SHAPES[shape_name]
 cfg = config_for_shape(get_arch(arch), shape)
 if shape.kind == "train":
     cfg = replace(cfg, remat=True, attn_chunk=1024)
-mesh = make_production_mesh(); act_hints.set_mesh(mesh)
+mesh = make_device_mesh(*production_mesh_spec()); act_hints.set_mesh(mesh)
 aparams = abstract_params(cfg)
 params_in = shd.attach(aparams, shd.params_shardings(cfg, mesh, aparams))
 with mesh:

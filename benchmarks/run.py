@@ -297,14 +297,13 @@ def gal_membership_benchmark(rounds: int = 8, m: int = 4, n: int = 512,
         })
 
 
-_SHARD_BENCH_SNIPPET = r"""
-import time
+_SHARD_CELL_SNIPPET = r"""
+import json, time
 from repro.utils.force_devices import apply_force_devices
 apply_force_devices()
 import numpy as np
 import jax
 from repro.core import gal
-from repro.core.engine import shard_eligible
 from repro.core.gal import GALConfig
 from repro.core.losses import get_loss
 from repro.core.organizations import make_orgs
@@ -315,73 +314,143 @@ from repro.models.zoo import Linear
 rounds, m, n, d = {rounds}, {m}, {n}, {d}
 rng_np = np.random.default_rng(0)
 key = jax.random.PRNGKey(0)
-ds = make_regression(rng_np, n=n, d=d)
-train, _ = train_test_split(ds, rng_np)
+ds = make_regression(rng_np, n=int(n / 0.8) + 2, d=d)
+train, _ = train_test_split(ds, rng_np)          # train split has n rows
 xs = split_features(train.x, m)
-orgs = make_orgs(xs, Linear())
-engine = "shard" if shard_eligible(orgs) else "scan"
 t0 = time.perf_counter()
-res = gal.fit(key, orgs, train.y, get_loss("mse"),
-              GALConfig(rounds=rounds, engine=engine))
+res = gal.fit(key, make_orgs(xs, Linear()), train.y, get_loss("mse"),
+              GALConfig(rounds=rounds, engine="{engine}",
+                        residual_dtype="{dtype}"))
 dt = time.perf_counter() - t0
-bcast = sum(res.history.get("comm_broadcast_bytes", [0]))
-gathered = sum(res.history.get("comm_gather_bytes", [0]))
-print(f"gal_fit_shard_D{{len(jax.devices())}}_R{{rounds}}_M{{m}},"
-      f"{{dt / rounds * 1e6:.1f}},rounds_per_sec={{rounds / dt:.2f}}"
-      f";engine={{res.engine}};bcast_B={{bcast:.0f}};gather_B={{gathered:.0f}}")
+print("CELL:" + json.dumps({{
+    "engine": res.engine, "devices": len(jax.devices()), "seconds": dt,
+    "n": int(train.y.shape[0]),
+    "bcast": sum(res.history["comm_broadcast_bytes"]),
+    "gather": sum(res.history["comm_gather_bytes"]),
+}}))
 """
 
 
-def gal_shard_scaling_benchmark(rounds: int = 8, n: int = 512,
-                                device_counts=(1, 4, 8),
-                                json_rows: list | None = None) -> None:
-    """rounds/sec of the org-sharded engine at 1/4/8 forced host devices.
-
-    Each row runs in a subprocess: --xla_force_host_platform_device_count
-    must be set before jax initializes, so the device count cannot vary
-    within one process. Organizations scale WITH the devices (one org per
-    device, 4 features each) — that is the axis the shard engine
-    parallelizes, so the D8 row genuinely uses 8 devices rather than
-    re-timing a 4-device mesh. The 1-device row runs 4 orgs on the scan
-    engine (no org mesh) as the single-device baseline; timings include
-    compilation, like gal_engine_benchmark."""
+def _run_shard_cell(n_dev: int, m: int, n: int, d: int, rounds: int,
+                    engine: str, dtype: str, timeout: int = 900):
+    """One cold subprocess fit (forced device count must be set before jax
+    initializes, so every cell is its own process). Returns the CELL dict
+    or an error string."""
     import os
     import subprocess
     import sys
 
-    for n_dev in device_counts:
-        m = n_dev if n_dev > 1 else 4
-        snippet = _SHARD_BENCH_SNIPPET.format(rounds=rounds, m=m, n=n,
-                                              d=4 * m)
-        env = {**os.environ, "REPRO_FORCE_DEVICES": str(n_dev)}
-        env["PYTHONPATH"] = "src" + (
-            os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
-        try:
-            proc = subprocess.run([sys.executable, "-c", snippet], env=env,
-                                  capture_output=True, text=True, timeout=600)
-        except subprocess.TimeoutExpired:
-            print(f"gal_fit_shard_D{n_dev}_R{rounds}_M{m},nan,"
-                  f"failed=timeout>600s")
-            continue
-        if proc.returncode == 0:
-            line = proc.stdout.strip()
-            print(line)
-            if json_rows is not None:
-                try:
-                    derived = dict(kv.split("=", 1) for kv in
-                                   line.split(",")[-1].split(";"))
-                    json_rows.append({
-                        "scenario": "shard_scaling", "devices": n_dev,
-                        "engine": derived.get("engine", "shard"),
-                        "rounds": rounds, "orgs": m,
-                        "rounds_per_sec": float(derived["rounds_per_sec"]),
-                    })
-                except (KeyError, ValueError):
-                    pass
-        else:
-            tail = proc.stderr.strip().splitlines()[-1:]
-            print(f"gal_fit_shard_D{n_dev}_R{rounds}_M{m},nan,"
-                  f"failed={' '.join(tail)}")
+    snippet = _SHARD_CELL_SNIPPET.format(rounds=rounds, m=m, n=n, d=d,
+                                         engine=engine, dtype=dtype)
+    env = {**os.environ, "REPRO_FORCE_DEVICES": str(n_dev)}
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run([sys.executable, "-c", snippet], env=env,
+                              capture_output=True, text=True, timeout=timeout)
+    except subprocess.TimeoutExpired:
+        return f"timeout>{timeout}s"
+    if proc.returncode != 0:
+        return " ".join(proc.stderr.strip().splitlines()[-1:]) or "crashed"
+    for line in proc.stdout.splitlines():
+        if line.startswith("CELL:"):
+            return json.loads(line[len("CELL:"):])
+    return "no CELL line in output"
+
+
+def gal_shard_scaling_benchmark(json_rows: list | None = None,
+                                full: bool = False) -> None:
+    """The PR8 placement grid: orgs x train rows x placement x wire dtype.
+
+    Placements per org count M:
+      * ``scan``       — the single-device baseline (vmap over orgs, D=1);
+      * ``one_to_one`` — the classic org mesh, one org per device (D=M;
+        skipped for M=64, where forcing 64 host devices on one machine
+        times every cell against the scheduler instead of the engine);
+      * ``block``      — MORE orgs than devices: D=8 forced devices carry
+        M/8 orgs each (D=2 for M=4), the placement this PR adds.
+
+    Timing is the MARGINAL round rate from a cold-process pair: each cell
+    runs twice in fresh subprocesses at R and 3R rounds, and
+    rounds/sec = 2R / (t_3R - t_R). Differencing two cold processes
+    cancels the compile+trace time that dominates small cells; same-process
+    re-timing does NOT work here (the warm second call reuses jit caches
+    and the asymmetry swamps the signal). Fast cells escalate R (x4, x16)
+    until the marginal clears the cold-start noise floor — a cell whose
+    difference stays non-positive even then is reported failed rather
+    than clamped to a fictitious rate. Comm bytes are the engine's own
+    per-round ledger ints, so the bf16 rows document the halved broadcast
+    next to their fp32 twins.
+
+    The default grid is the CI smoke slice (n=512, M in {4, 16});
+    ``full=True`` (the ``--full-shard-grid`` flag) runs the committed
+    BENCH_PR8.json grid with n=65536 and M=64 cells — the block-vs-scan
+    acceptance numbers live there."""
+    grid_m = (4, 16, 64) if full else (4, 16)
+    grid_n = (512, 65536) if full else (512,)
+    base_r = 4
+    # A cold-pair marginal below this is dominated by compile-time
+    # variance between the two fresh processes, not by round cost.
+    _MARGINAL_FLOOR_S = 0.4
+
+    for n in grid_n:
+        for m in grid_m:
+            # wide-feature orgs at bench scale would time the local solve;
+            # the big-n cells give each org one feature so the round loop
+            # (broadcast, fits, weight fit, line search) is what scales
+            d = 4 * m if n == 512 else m
+            cells = [("scan", 1, "scan")]
+            if m <= 16:
+                cells.append(("one_to_one", m, "shard"))
+            else:
+                print(f"# skip one_to_one M={m} n={n}: would force {m} "
+                      f"host devices on one machine")
+            cells.append(("block", 2 if m == 4 else 8, "shard"))
+            for placement, n_dev, engine in cells:
+                for dtype in ("fp32", "bf16"):
+                    # Fast cells put the 8-round marginal below the
+                    # compile-time variance between two cold processes;
+                    # escalate the round count until the difference
+                    # clears the noise floor instead of clamping it.
+                    for mult in (1, 4, 16):
+                        r1, r3 = base_r * mult, 3 * base_r * mult
+                        a = _run_shard_cell(n_dev, m, n, d, r1, engine,
+                                            dtype)
+                        b = _run_shard_cell(n_dev, m, n, d, r3, engine,
+                                            dtype)
+                        if not (isinstance(a, dict)
+                                and isinstance(b, dict)):
+                            break
+                        marginal = b["seconds"] - a["seconds"]
+                        if marginal >= _MARGINAL_FLOOR_S:
+                            break
+                    name = (f"gal_shard_{placement}_{dtype}_D{n_dev}"
+                            f"_M{m}_N{n}")
+                    if not (isinstance(a, dict) and isinstance(b, dict)):
+                        print(f"{name},nan,failed={a if isinstance(a, str) else b}")
+                        continue
+                    if marginal <= 0:
+                        print(f"{name},nan,"
+                              f"failed=unstable_marginal_at_{r3}_rounds")
+                        continue
+                    rps = (r3 - r1) / marginal
+                    print(f"{name},{marginal / (r3 - r1) * 1e6:.1f},"
+                          f"rounds_per_sec={rps:.2f};engine={b['engine']};"
+                          f"bcast_B_per_round={b['bcast'] // r3};"
+                          f"gather_B_per_round={b['gather'] // r3}")
+                    if json_rows is not None:
+                        json_rows.append({
+                            "scenario": "shard_scaling",
+                            "placement": placement, "dtype": dtype,
+                            "devices": n_dev, "engine": b["engine"],
+                            "rounds": r3 - r1, "orgs": m,
+                            "n": b.get("n", n), "d": d,
+                            "seconds": marginal, "rounds_per_sec": rps,
+                            "comm_broadcast_bytes_per_round":
+                                b["bcast"] // r3,
+                            "comm_gather_bytes_per_round":
+                                b["gather"] // r3,
+                        })
 
 
 def roofline_summary(outdir: str = "benchmarks/results/dryrun") -> None:
@@ -449,7 +518,13 @@ def load_bench_json(path: str) -> dict:
     """Load a BENCH_*.json artifact from ANY PR generation, backfilling
     provenance fields older writers never stamped (``jax_version`` /
     ``numpy_version`` / ``git_sha`` arrive as None on PR4/PR5-era files)
-    so downstream comparisons can treat every artifact uniformly."""
+    so downstream comparisons can treat every artifact uniformly.
+
+    Rows are schema-checked: every row must be an object naming its
+    ``scenario``, and any timing fields present must be numeric. Problem
+    sizes older shard_scaling writers left implicit (``n`` / ``d`` /
+    ``seconds``) are backfilled as None so consumers can select on them
+    without per-generation special cases."""
     payload = json.loads(Path(path).read_text())
     if payload.get("schema") != "gal-bench/v1":
         raise ValueError(f"{path}: not a gal-bench/v1 artifact "
@@ -458,6 +533,19 @@ def load_bench_json(path: str) -> dict:
                   "git_sha"):
         payload.setdefault(field, None)
     payload.setdefault("rows", [])
+    if not isinstance(payload["rows"], list):
+        raise ValueError(f"{path}: 'rows' must be a list")
+    for i, row in enumerate(payload["rows"]):
+        if not isinstance(row, dict) or not isinstance(
+                row.get("scenario"), str):
+            raise ValueError(f"{path}: row {i} is not an object with a "
+                             f"'scenario' string")
+        for field in ("seconds", "rounds_per_sec", "us_per_call"):
+            if field in row and not isinstance(row[field], (int, float)):
+                raise ValueError(f"{path}: row {i} field {field!r} is "
+                                 f"not numeric")
+        for field in ("n", "d", "seconds"):
+            row.setdefault(field, None)
     return payload
 
 
@@ -474,6 +562,10 @@ def main() -> None:
                     help="run only the GAL engine benchmarks (the fast "
                          "CI-artifact path): no tables, no micro, no "
                          "roofline")
+    ap.add_argument("--full-shard-grid", action="store_true",
+                    help="run the full placement grid (orgs up to 64, "
+                         "65536-row cells) instead of the CI smoke slice "
+                         "— the committed BENCH_PR8.json numbers")
     args = ap.parse_args()
 
     json_rows: list = []
@@ -487,7 +579,8 @@ def main() -> None:
               "(name,us,derived)")
         gal_membership_benchmark(json_rows=json_rows)
         print("\n# gal shard engine scaling")
-        gal_shard_scaling_benchmark(json_rows=json_rows)
+        gal_shard_scaling_benchmark(json_rows=json_rows,
+                                    full=args.full_shard_grid)
         if args.json_out:
             write_bench_json(args.json_out, json_rows)
         return
@@ -521,7 +614,8 @@ def main() -> None:
 
     print("\n# gal shard engine scaling: rounds/sec at forced host devices "
           "(name,us_per_round,derived)")
-    gal_shard_scaling_benchmark(json_rows=json_rows)
+    gal_shard_scaling_benchmark(json_rows=json_rows,
+                                full=args.full_shard_grid)
 
     print("\n# roofline table (from dry-run artifacts)")
     roofline_summary()

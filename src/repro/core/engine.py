@@ -77,6 +77,7 @@ frozen) and trimmed from the returned history on the host side.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -95,7 +96,7 @@ from repro.optim.optimizers import adam, apply_updates
 from repro.data.partition import (pad_and_stack, pad_and_stack_sharded,
                                   stack_groups)
 from repro.launch.mesh import (grouped_mesh_eligible, make_org_mesh,
-                               org_mesh_eligible)
+                               org_block_size, org_mesh_eligible)
 from repro.launch.sharding import org_replicated, org_stack_sharding
 from repro.optim.lbfgs import line_search
 
@@ -134,13 +135,16 @@ def metric_traceable(metric_fn: Callable,
 
 
 def shard_eligible(orgs: Sequence[Any],
-                   eval_sets: Optional[Dict[str, tuple]] = None) -> bool:
+                   eval_sets: Optional[Dict[str, tuple]] = None,
+                   data_shards: int = 1) -> bool:
     """True when the org-sharded multi-device path can run these orgs:
-    scan-compatible AND an "org" mesh exists (len(orgs) divides the local
-    device count, multi-device host). ``engine="auto"`` prefers this path
+    scan-compatible AND an "org" mesh exists — one-to-one (len(orgs)
+    divides the org-axis device count) or block placement (the org-axis
+    device count divides len(orgs), a block of orgs per device); see
+    ``launch.mesh.org_mesh_eligible``. ``engine="auto"`` prefers this path
     whenever it holds."""
     return (scan_compatible(orgs, eval_sets)
-            and org_mesh_eligible(len(orgs)))
+            and org_mesh_eligible(len(orgs), data_shards))
 
 
 def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
@@ -178,9 +182,44 @@ def _finalize(outs: Dict[str, Any], init: Dict[str, Any], masked: bool,
     }
 
 
+def _resid_wire_bytes(config) -> int:
+    """Per-element width of the residual broadcast on the wire (step 2):
+    2 under ``GALConfig(residual_dtype="bf16")``, 4 otherwise. The ONE
+    place the ledgers and the engines read the compressed-broadcast knob."""
+    return 2 if getattr(config, "residual_dtype", "float32") in (
+        "bf16", "bfloat16") else 4
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_allreduce(x, axes):
+    """Identity whose VJP psums the cotangent over ``axes``.
+
+    Inside ``shard_map`` a ``psum`` in the loss transposes to identity, so
+    ``jax.grad`` of a psum'd global-mean objective yields only the LOCAL
+    shard's gradient contribution — correct values, shard-local gradients.
+    Wrapping a replicated scalar input (the line-search eta) in this
+    primitive reassembles the global gradient at the leaf, the same
+    correction ``fit_weights(grad_axes=...)`` applies explicitly per step."""
+    return x
+
+
+def _grad_allreduce_fwd(x, axes):
+    return x, None
+
+
+def _grad_allreduce_bwd(axes, _, ct):
+    for ax in axes:
+        ct = jax.lax.psum(ct, ax)
+    return (ct,)
+
+
+_grad_allreduce.defvjp(_grad_allreduce_fwd, _grad_allreduce_bwd)
+
+
 def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
                 m, n, k, masked, metrics, alice_loss, state0=(), t0=0,
-                restore=None, member_sched=None, org_ids=None):
+                restore=None, member_sched=None, org_ids=None,
+                wfit_kwargs=None, f0=None, eta_grad_axes=()):
     """The shared T-round loop of both fused engines: Alg. 1 steps 1-6
     traced once and scanned over rounds ``t0 .. config.rounds`` (``t0=0``
     for a fresh fit; a resumed fit restores the scan carry and picks up
@@ -229,6 +268,24 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
     fitting the reduced org set. ``None`` means every org attends every
     round (the pre-membership fast path, bit-identical to it).
 
+    ``wfit_kwargs`` distributes the step-4 weight fit: a callable mapping
+    this round's ``(preds, residual)`` to extra ``fit_weights`` kwargs (the
+    block-sharded engine supplies a Gram-statistics ``objective_fn`` for
+    the quadratic alice loss, a psum-combining ``combine_fn`` otherwise,
+    plus ``grad_axes``; None keeps the replicated fit byte-identical).
+    ``f0``
+    overrides the cold-start ensemble init ``loss.init_prediction(y_in)``
+    — the data-sharded engine computes it host-side from the FULL label
+    vector, since e.g. a median init is not a per-shard reduction.
+
+    ``config.residual_dtype="bf16"`` casts the privatized residual to
+    bfloat16 BEFORE it crosses ``broadcast`` (the wire) and upcasts after:
+    the identity broadcast of the vmap engines and the single-contributor
+    psum of the mesh engine both reproduce the rounded values exactly, so
+    all engines stay draw-for-draw identical under compression too. Alice's
+    own weight-fit / line-search steps keep her full-precision residual —
+    only what leaves her device is compressed.
+
     Everything else — residual, privacy, weight fit, eta line search,
     masked early stopping, history bookkeeping — is engine-independent and
     lives here exactly once. Returns ``(outs, init, carry_final)``; the
@@ -236,6 +293,7 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
     on-disk artifact) persists.
     """
     have_sched = member_sched is not None
+    compress = _resid_wire_bytes(config) == 2
 
     def round_step(carry, xs):
         t, member_row = xs
@@ -246,11 +304,16 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
         key, k_round = jax.random.split(key)
         # 1. pseudo-residual  2. privatized broadcast
         residual = loss.residual(y_in, f)
-        r_bcast = broadcast(apply_privacy(
+        r_wire = apply_privacy(
             jax.random.fold_in(k_round, 13), residual, config.privacy,
             alpha=config.privacy_alpha,
             n_intervals=config.privacy_intervals,
-        ))
+        )
+        if compress:
+            r_wire = r_wire.astype(jnp.bfloat16)
+        r_bcast = broadcast(r_wire)
+        if r_bcast.dtype != residual.dtype:
+            r_bcast = r_bcast.astype(residual.dtype)
         # 3. parallel local fits over the org axis
         state, params_out, preds, combine = fit_orgs(
             k_round, r_bcast, t, state, active, member)
@@ -261,14 +324,21 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
                 alice_loss, epochs=config.weight_epochs,
                 lr=config.weight_lr, weight_decay=config.weight_decay,
                 mask=member, org_ids=org_ids,
+                **(wfit_kwargs(preds, residual)
+                   if wfit_kwargs is not None else {}),
             )
         else:
             w = uniform_weights(m, mask=member)
         direction = combine(w, None)
 
         # 5. line-search eta   6. masked ensemble update
+        # on a data-sharded mesh the loss value is global (psum'd) but its
+        # AD gradient is shard-local; _grad_allreduce on eta restores the
+        # global gradient the secant iteration needs
+        eta_in = ((lambda e: _grad_allreduce(e, eta_grad_axes))
+                  if eta_grad_axes else (lambda e: e))
         eta = line_search(
-            lambda e: loss(y_in, f + e * direction),
+            lambda e: loss(y_in, f + eta_in(e) * direction),
             method=config.eta_method, x0=config.eta0,
         )
         eta_eff = jnp.where(active, eta, 0.0) if masked else eta
@@ -288,10 +358,10 @@ def _run_rounds(key, y_in, evals_in, broadcast, fit_orgs, *, loss, config,
         return (f_new, new_evals, key, new_active, state), outs
 
     if restore is None:
-        f = jnp.broadcast_to(loss.init_prediction(y_in), (n, k))
+        f0v = loss.init_prediction(y_in) if f0 is None else f0
+        f = jnp.broadcast_to(f0v, (n, k))
         f_evals = {
-            name: jnp.broadcast_to(loss.init_prediction(y_in),
-                                   (y_e.shape[0], k))
+            name: jnp.broadcast_to(f0v, (y_e.shape[0], k))
             for name, (_, y_e) in evals_in.items()
         }
         active0 = jnp.asarray(True)
@@ -685,11 +755,14 @@ def fit_grouped(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
             dms_flags[i] = g.dms
     eval_ns = [int(y_e.shape[0])
                for (_, y_e) in (eval_sets or {}).values()]
+    rb = _resid_wire_bytes(config)
     if sched_np is None:
-        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns)
+        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns,
+                                            resid_dtype_bytes=rb)
     else:
         from repro.core.membership import membership_comm_ledger
-        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns)
+        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns,
+                                                   resid_dtype_bytes=rb)
         bcast_b, gather_b = bcast_l[t0:], gather_l[t0:]
     single = len(groups) == 1 and not plan.has_dms
     out = _finalize(outs, init, masked, config.rounds - t0,
@@ -739,6 +812,305 @@ def fit_scan(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                        plan=plan, resume=resume, membership=membership)
 
 
+class _DataAxisLoss:
+    """Loss proxy for the data-sharded engine: the global mean loss is the
+    psum of the equal shards' local means; the pseudo-residual stays an
+    elementwise (hence shard-local) map. ``init_prediction`` is NOT a
+    per-shard reduction (think median inits) — the engine computes it
+    host-side from the full label vector and threads it through
+    ``_run_rounds(f0=...)``, so the proxy never evaluates it in-trace."""
+
+    def __init__(self, base: Loss, axis: str, shards: int):
+        self.base, self.axis, self.shards = base, axis, shards
+
+    def __call__(self, y, f):
+        return jax.lax.psum(self.base(y, f), self.axis) / self.shards
+
+    def residual(self, y, f):
+        return self.base.residual(y, f)
+
+    def init_prediction(self, y):
+        return self.base.init_prediction(y)
+
+
+def _shard_program(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
+                   loss: Loss, config: Any,
+                   eval_sets: Optional[Dict[str, tuple]] = None,
+                   metrics: Optional[Dict[str, Callable]] = None,
+                   resume: Optional[Dict[str, Any]] = None,
+                   membership=None) -> Dict[str, Any]:
+    """Build (but do not run) the org-sharded engine's compiled program:
+    placement, shard_map wrapping, jit, and the operand list. ``fit_shard``
+    executes it; ``lower_shard_round`` hands its lowered HLO to the
+    roofline tools so the collective traffic the compiler actually emits
+    can be reconciled with the protocol ledger's ints."""
+    from jax.sharding import NamedSharding
+
+    m = len(orgs)
+    data_shards = int(getattr(config, "data_shards", 1) or 1)
+    if not org_mesh_eligible(m, data_shards):
+        raise ValueError(
+            f"engine='shard' needs an org mesh: {m} orgs must divide the "
+            f"org-axis device count or be divisible by it for block "
+            f"placement ({jax.device_count()} devices / {data_shards} data "
+            f"shard(s), multi-device host required)")
+    mesh = make_org_mesh(m, data_shards)
+    bsz = org_block_size(m, data_shards)
+    has_data = data_shards > 1
+    model = orgs[0].model
+    local_loss = orgs[0].local_loss
+    n, k = y.shape[0], y.shape[-1]
+    if has_data:
+        if config.privacy:
+            raise ValueError(
+                "data_shards > 1 cannot run a privatized broadcast: the "
+                "per-shard noise draws would not match the protocol's "
+                "single (N, K) draw")
+        if not getattr(model, "data_parallel", False):
+            raise ValueError(
+                f"data_shards > 1 needs a data-parallel local model "
+                f"(fit accepting data_axis); {type(model).__name__} "
+                f"does not declare data_parallel")
+        if n % data_shards:
+            raise ValueError(
+                f"data_shards={data_shards} must divide the train rows "
+                f"({n}) into equal shards")
+    n_local = n // data_shards
+    alice_loss = lq_loss(config.alice_q)
+    masked = config.eta_stop_threshold > 0.0
+    loss_in = _DataAxisLoss(loss, "data", data_shards) if has_data else loss
+    alice_in = (_DataAxisLoss(alice_loss, "data", data_shards)
+                if has_data else alice_loss)
+
+    # org-major placement: a block of bsz org slices / ids per device (one
+    # each under one-to-one placement), Alice state replicated; with a data
+    # axis, each org's rows are additionally split across it
+    x_stack, dims = pad_and_stack_sharded(
+        [org.x_train for org in orgs], mesh, block_size=bsz,
+        shard_data=has_data)
+    pad_to = int(x_stack.shape[-1]) if x_stack.ndim == 3 else None
+    org_ids = jax.device_put(
+        jnp.asarray([org.index for org in orgs], jnp.uint32),
+        org_stack_sharding(mesh, 1, block_size=bsz))
+    # Alice's full id vector + the membership schedule ride replicated:
+    # the weight fit is her step, not a per-device one
+    ids_full = jax.device_put(
+        jnp.asarray([org.index for org in orgs], jnp.uint32),
+        org_replicated(mesh))
+    sched_np = None if membership is None else np.asarray(membership, bool)
+    sched_in = (None if sched_np is None
+                else jax.device_put(jnp.asarray(sched_np),
+                                    org_replicated(mesh)))
+    y_spec = P("data") if has_data else P()
+    y_dev = jax.device_put(y, NamedSharding(mesh, y_spec))
+    eval_stacks, eval_in_specs = {}, {}
+    if eval_sets:
+        for name, (xs_e, y_e) in eval_sets.items():
+            # eval slices stay replicated over "data": the prediction
+            # stage is per-org, not per-row-shard
+            xe_stack, _ = pad_and_stack_sharded(list(xs_e), mesh,
+                                                pad_to=pad_to,
+                                                block_size=bsz)
+            eval_stacks[name] = (xe_stack,
+                                 jax.device_put(y_e, org_replicated(mesh)))
+            eval_in_specs[name] = (P("org"), P())
+
+    t0 = 0
+    key0 = rng
+    extras: Dict[str, Any] = {}
+    extras_specs: Dict[str, Any] = {}
+    if has_data:
+        # init ensemble from the FULL label vector, host-side (a median
+        # init is not a per-shard reduction); rides the mesh replicated
+        extras["f0"] = jnp.asarray(loss.init_prediction(y))
+        extras_specs["f0"] = P()
+    if resume is not None:
+        t0 = int(resume["t_next"])
+        key0 = jnp.asarray(resume["key"])
+        # the restored carry is org-independent: replicate it on the mesh
+        # (the ensemble state shards over "data" when that axis exists)
+        extras["resume"] = {
+            "f": jax.device_put(jnp.asarray(resume["f"]),
+                                NamedSharding(mesh, y_spec)),
+            "f_evals": {nm: jax.device_put(
+                jnp.asarray(resume.get("f_evals", {})[nm]),
+                org_replicated(mesh)) for nm in eval_stacks},
+            "active": jax.device_put(jnp.asarray(resume["active"]),
+                                     org_replicated(mesh))}
+        extras_specs["resume"] = {
+            "f": y_spec,
+            "f_evals": {name: P() for name in eval_stacks},
+            "active": P()}
+
+    def run(key, y_in, x_in, ids_in, evals_in, sched_dev, ids_all, extra):
+        pos = jax.lax.axis_index("org")
+
+        def broadcast(r_wire):
+            # step 2 as a REAL collective: only Alice's device row (org
+            # position 0) contributes, so the psum equals her privatized
+            # residual exactly while crossing every device boundary
+            return jax.lax.psum(
+                jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
+
+        wfit = None
+        if bsz == 1 and not has_data:
+            my_x = x_in[0]             # this device's org slice (N, d_max)
+            my_id = ids_in[0]
+
+            def fit_orgs(k_round, r_bcast, t, state, active, member):
+                del t, active, member  # single noiseless fresh-fit group:
+                # stateless, and membership acts purely through the step-4
+                # weight mask (w[pos] == 0.0 zeroes this device's psum term)
+                # THIS device's local fit only (the scan engine's vmap axis
+                # became the mesh axis); RNG key identical to other engines
+                params_m = model.fit(jax.random.fold_in(k_round, my_id),
+                                     my_x, r_bcast, local_loss)
+                pred_m = model.apply(params_m, my_x)          # (N, K)
+                # step 4's inputs: fitted values gathered back to Alice
+                preds = jax.lax.all_gather(pred_m, "org")     # (M, N, K)
+
+                def combine(w, name):
+                    # weighted org-sum as a psum over the mesh axis
+                    out_m = pred_m if name is None \
+                        else model.apply(params_m, evals_in[name][0][0])
+                    return jax.lax.psum(w[pos] * out_m, "org")
+
+                params_out = jax.tree_util.tree_map(lambda l: l[None],
+                                                    params_m)
+                return state, params_out, preds, combine
+        else:
+            # block placement / data axis: this device fits its WHOLE block
+            # of bsz orgs (vmap inside the manual region), combines are a
+            # block-local einsum + psum, and the step-4 weight fit is
+            # distributed — each device optimizes against its own block of
+            # fitted values, with the per-step theta gradient psummed back
+            # to the replicated trajectory (see weights.fit_weights)
+            def fit_orgs(k_round, r_bcast, t, state, active, member):
+                del t, active, member
+                keys = jax.vmap(
+                    lambda i: jax.random.fold_in(k_round, i))(ids_in)
+
+                def fit_one(key_m, x_m):
+                    if has_data:
+                        p = model.fit(key_m, x_m, r_bcast, local_loss,
+                                      data_axis="data")
+                    else:
+                        p = model.fit(key_m, x_m, r_bcast, local_loss)
+                    return p, model.apply(p, x_m)
+
+                params_b, preds_b = jax.vmap(fit_one)(keys, x_in)
+                # (M, N_local, K): the protocol's fitted-value gather, now
+                # of block-local stacks
+                preds = jax.lax.all_gather(preds_b, "org", tiled=True)
+
+                def combine(w, name):
+                    out_b = (preds_b if name is None
+                             else jax.vmap(model.apply)(params_b,
+                                                        evals_in[name][0]))
+                    wl = jax.lax.dynamic_slice(w, (pos * bsz,), (bsz,))
+                    return jax.lax.psum(
+                        jnp.einsum("b,bnk->nk", wl, out_b), "org")
+
+                return state, params_b, preds, combine
+
+            grad_axes = ((("org",) if bsz > 1 else ())
+                         + (("data",) if has_data else ()))
+
+            def wfit(preds, residual):
+                if bsz == 1:
+                    # one org per device, rows sharded: the replicated
+                    # einsum stands, only the loss mean reduces over "data"
+                    return {"grad_axes": grad_axes}
+                blk = jax.lax.dynamic_slice(
+                    preds, (pos * bsz, 0, 0), (bsz,) + preds.shape[1:])
+                if getattr(alice_in, "q", None) == 2.0:
+                    # quadratic alice loss (the alice_q=2 default): the
+                    # objective  mean (r - sum_m w_m p_m)^2  factors through
+                    # per-block Gram statistics computed ONCE per round,
+                    #   G_blk = blk . preds^T   (B, M)
+                    #   c_blk = blk . r         (B,)
+                    # so each of the 100 Adam epochs costs O(B*M) flops and
+                    # a single (M,) gradient psum — no (N, K) tensor is
+                    # touched, let alone reduced, inside the epoch loop.
+                    # Each device's value is its block's partial sum; the
+                    # explicit grad psum in fit_weights reassembles the
+                    # exact replicated gradient (Adam never reads the
+                    # value). Masked orgs still contribute exact zeros:
+                    # w == 0.0 annihilates their rows and columns.
+                    g_blk = jnp.einsum("bnk,mnk->bm", blk, preds)
+                    c_blk = jnp.einsum("bnk,nk->b", blk, residual)
+                    rss = jnp.sum(jnp.square(residual))
+                    denom = residual.size
+
+                    def objective_fn(w):
+                        wl = jax.lax.dynamic_slice(w, (pos * bsz,), (bsz,))
+                        quad = jnp.dot(wl, g_blk @ w) \
+                            - 2.0 * jnp.dot(wl, c_blk)
+                        return (quad + rss) / denom
+
+                    return {"m": m, "objective_fn": objective_fn,
+                            "grad_axes": grad_axes}
+
+                def combine_fn(w):
+                    wl = jax.lax.dynamic_slice(w, (pos * bsz,), (bsz,))
+                    local = jnp.einsum("b,bnk->nk", wl, blk)
+                    # forward: the exact psum'd combination; backward: AD
+                    # sees only the local block's path (the other blocks
+                    # enter as a stop_gradient constant), so the epoch's
+                    # second (N, K) all-reduce — psum's transpose — never
+                    # exists. The explicit (M,) grad psum in fit_weights
+                    # reassembles the identical global gradient.
+                    total = jax.lax.psum(jax.lax.stop_gradient(local), "org")
+                    return total - jax.lax.stop_gradient(local) + local
+
+                return {"m": m, "combine_fn": combine_fn,
+                        "grad_axes": grad_axes}
+
+        res_in = extra.get("resume")
+        restore = (None if res_in is None
+                   else (res_in["f"], res_in["f_evals"], res_in["active"]))
+        return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
+                           loss=loss_in, config=config, m=m, n=n_local, k=k,
+                           masked=masked, metrics=metrics,
+                           alice_loss=alice_in, t0=t0, restore=restore,
+                           member_sched=sched_dev, org_ids=ids_all,
+                           wfit_kwargs=wfit, f0=extra.get("f0"),
+                           eta_grad_axes=(("data",) if has_data else ()))
+
+    # everything in the scalar bundle is replicated (collectives + identical
+    # per-device programs on replicated inputs); only the per-round params
+    # keep an org axis, split block-wise over the mesh
+    out_specs = {"params": P(None, "org"), "eta": P(), "w": P(),
+                 "valid": P(), "train_loss": P()}
+    for name in eval_stacks:
+        out_specs[f"{name}_loss"] = P()
+        for mname in (metrics or {}):
+            out_specs[f"{name}_{mname}"] = P()
+    # the returned carry is fully replicated — ensemble state, per-eval
+    # carries, key and early-stop flag ride the collectives — except the
+    # train-set ensemble, which shards over "data" when that axis exists;
+    # the state slot is the empty tuple (shard plans are stateless)
+    carry_specs = (y_spec, {name: P() for name in eval_stacks}, P(), P(), ())
+    x_spec = P("org", "data") if has_data else P("org")
+    in_specs = [P(), y_spec, x_spec, P("org"), eval_in_specs, P(), P(),
+                extras_specs]
+    operands = [key0, y_dev, x_stack, org_ids, eval_stacks, sched_in,
+                ids_full, extras]
+    run_sharded = shard_map(
+        run, mesh=mesh,
+        in_specs=tuple(in_specs),
+        out_specs=(out_specs, P(), carry_specs),
+        check_rep=False,
+    )
+    return {"jit": jax.jit(run_sharded), "operands": operands,
+            "mesh": mesh, "dims": dims, "pad_to": pad_to,
+            "sched_np": sched_np, "t0": t0, "n": n, "k": k, "m": m,
+            "eval_ns": [int(y_e.shape[0])
+                        for (_, y_e) in eval_stacks.values()],
+            "block_size": bsz, "data_shards": data_shards,
+            "masked": masked}
+
+
 def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
               config: Any, eval_sets: Optional[Dict[str, tuple]] = None,
               metrics: Optional[Dict[str, Callable]] = None,
@@ -748,13 +1120,22 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
 
     Same contract as ``fit_scan`` — the T-round ``lax.scan``, the single
     host sync, and the returned dict are identical — but the org axis is a
-    real device mesh instead of a ``vmap``: org m's padded slice, per-round
-    params, and fitted values never leave device m except through Alg. 1's
-    three collectives (residual broadcast, fitted-value gather, weighted
-    direction psum). The returned history carries the per-round
-    communication ledger (``comm_broadcast_bytes`` / ``comm_gather_bytes``,
-    paper Table-14 convention: Alice already holds her own residual copy,
-    every org — Alice included — ships its fitted values).
+    real device mesh instead of a ``vmap``: an org's padded slice,
+    per-round params, and fitted values never leave its device except
+    through Alg. 1's three collectives (residual broadcast, fitted-value
+    gather, weighted direction psum). Two placements (see
+    ``launch.mesh.org_mesh_eligible``): one-to-one — one org per device —
+    and block — a contiguous block of ``M // device_count`` orgs per
+    device, fitted by a vmap inside the manual region, with the step-4
+    weight fit distributed over the blocks. ``GALConfig(data_shards=...)``
+    adds a second "data" mesh axis splitting each org's N rows (the
+    per-round weight fit and eta line search reduce across it);
+    ``GALConfig(residual_dtype="bf16")`` halves the broadcast wire width.
+    The returned history carries the per-round communication ledger
+    (``comm_broadcast_bytes`` / ``comm_gather_bytes``, paper Table-14
+    convention: Alice already holds her own residual copy, every org —
+    Alice included — ships its fitted values; the broadcast column counts
+    the compressed wire dtype).
 
     ``resume`` restores an artifact's round-scan carry (replicated across
     the mesh — the ensemble state and RNG chain are org-independent) and
@@ -766,141 +1147,27 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
     have static shapes — but its assistance weight is exactly 0.0, so its
     psum contribution is exact zeros and the recorded per-round wire
     ledger counts only the live orgs."""
-    m = len(orgs)
-    if not org_mesh_eligible(m):
-        raise ValueError(
-            f"engine='shard' needs an org mesh: {m} orgs must divide the "
-            f"device count ({jax.device_count()} devices, multi-device "
-            f"host required)")
-    mesh = make_org_mesh(m)
-    model = orgs[0].model
-    local_loss = orgs[0].local_loss
-    n, k = y.shape[0], y.shape[-1]
-    alice_loss = lq_loss(config.alice_q)
-    masked = config.eta_stop_threshold > 0.0
-
-    # org-major placement: slice m / id m on device m, Alice state replicated
-    x_stack, dims = pad_and_stack_sharded([org.x_train for org in orgs], mesh)
-    pad_to = int(x_stack.shape[-1]) if x_stack.ndim == 3 else None
-    org_ids = jax.device_put(
-        jnp.asarray([org.index for org in orgs], jnp.uint32),
-        org_stack_sharding(mesh, 1))
-    # Alice's full id vector + the membership schedule ride replicated:
-    # the weight fit is her step, not a per-device one
-    ids_full = jax.device_put(
-        jnp.asarray([org.index for org in orgs], jnp.uint32),
-        org_replicated(mesh))
-    sched_np = None if membership is None else np.asarray(membership, bool)
-    sched_in = (None if sched_np is None
-                else jax.device_put(jnp.asarray(sched_np),
-                                    org_replicated(mesh)))
-    y_dev = jax.device_put(y, org_replicated(mesh))
-    eval_stacks, eval_in_specs = {}, {}
-    if eval_sets:
-        for name, (xs_e, y_e) in eval_sets.items():
-            xe_stack, _ = pad_and_stack_sharded(list(xs_e), mesh,
-                                                pad_to=pad_to)
-            eval_stacks[name] = (xe_stack,
-                                 jax.device_put(y_e, org_replicated(mesh)))
-            eval_in_specs[name] = (P("org"), P())
-
-    t0 = 0
-    key0 = rng
-    resume_in = None
-    if resume is not None:
-        t0 = int(resume["t_next"])
-        key0 = jnp.asarray(resume["key"])
-        # the restored carry is org-independent: replicate it on the mesh
-        resume_in = jax.tree_util.tree_map(
-            lambda a: jax.device_put(jnp.asarray(a), org_replicated(mesh)),
-            {"f": resume["f"],
-             "f_evals": {nm: resume.get("f_evals", {})[nm]
-                         for nm in eval_stacks},
-             "active": resume["active"]})
-
-    def run(key, y_in, x_in, ids_in, evals_in, sched_dev, ids_all,
-            res_in=None):
-        my_x = x_in[0]                 # this device's org slice (N, d_max)
-        my_id = ids_in[0]
-        pos = jax.lax.axis_index("org")
-
-        def broadcast(r_wire):
-            # step 2 as a REAL collective: only Alice's device (org position
-            # 0) contributes, so the psum equals her privatized residual
-            # exactly while crossing every device boundary
-            return jax.lax.psum(
-                jnp.where(pos == 0, r_wire, jnp.zeros_like(r_wire)), "org")
-
-        def fit_orgs(k_round, r_bcast, t, state, active, member):
-            del t, active, member  # single noiseless fresh-fit group:
-            # stateless, and membership acts purely through the step-4
-            # weight mask (w[pos] == 0.0 zeroes this device's psum term)
-            # THIS device's local fit only (the scan engine's vmap axis
-            # became the mesh axis); RNG key identical to the other engines
-            params_m = model.fit(jax.random.fold_in(k_round, my_id), my_x,
-                                 r_bcast, local_loss)
-            pred_m = model.apply(params_m, my_x)          # (N, K)
-            # step 4's inputs: fitted values gathered back to Alice
-            preds = jax.lax.all_gather(pred_m, "org")     # (M, N, K)
-
-            def combine(w, name):
-                # weighted org-sum as a psum over the mesh axis
-                out_m = pred_m if name is None \
-                    else model.apply(params_m, evals_in[name][0][0])
-                return jax.lax.psum(w[pos] * out_m, "org")
-
-            params_out = jax.tree_util.tree_map(lambda l: l[None], params_m)
-            return state, params_out, preds, combine
-
-        restore = (None if res_in is None
-                   else (res_in["f"], res_in["f_evals"], res_in["active"]))
-        return _run_rounds(key, y_in, evals_in, broadcast, fit_orgs,
-                           loss=loss, config=config, m=m, n=n, k=k,
-                           masked=masked, metrics=metrics,
-                           alice_loss=alice_loss, t0=t0, restore=restore,
-                           member_sched=sched_dev, org_ids=ids_all)
-
-    # everything in the scalar bundle is replicated (collectives + identical
-    # per-device programs on replicated inputs); only the per-round params
-    # keep an org axis, split over the mesh
-    out_specs = {"params": P(None, "org"), "eta": P(), "w": P(),
-                 "valid": P(), "train_loss": P()}
-    for name in eval_stacks:
-        out_specs[f"{name}_loss"] = P()
-        for mname in (metrics or {}):
-            out_specs[f"{name}_{mname}"] = P()
-    # the returned carry is fully replicated: ensemble state, per-eval
-    # carries, key and early-stop flag ride the collectives; the state
-    # slot is the empty tuple (shard plans are stateless)
-    carry_specs = (P(), {name: P() for name in eval_stacks}, P(), P(), ())
-    in_specs = [P(), P(), P("org"), P("org"), eval_in_specs, P(), P()]
-    operands = [key0, y_dev, x_stack, org_ids, eval_stacks, sched_in,
-                ids_full]
-    if resume_in is not None:
-        in_specs.append({"f": P(),
-                         "f_evals": {name: P() for name in eval_stacks},
-                         "active": P()})
-        operands.append(resume_in)
-    run_sharded = shard_map(
-        run, mesh=mesh,
-        in_specs=tuple(in_specs),
-        out_specs=(out_specs, P(), carry_specs),
-        check_rep=False,
-    )
-    outs, init, carry = jax.jit(run_sharded)(*operands)
-    # per-round ledger of the three collectives above, from the (static)
-    # operand shapes — exact ints, Table-14 convention (Alice already holds
-    # her residual copy; all M orgs ship fitted values for the train AND
-    # eval prediction stages). gal_round_bytes is the one formula every
+    prog = _shard_program(rng, orgs, y, loss, config, eval_sets, metrics,
+                          resume, membership)
+    outs, init, carry = prog["jit"](*prog["operands"])
+    # per-round ledger of the collectives above, from the (static) operand
+    # shapes — exact ints, Table-14 convention (Alice already holds her
+    # residual copy; all M orgs ship fitted values for the train AND eval
+    # prediction stages). gal_round_bytes is the one formula every
     # engine's ledger comes from, so the history is engine-independent.
-    eval_ns = [int(y_e.shape[0]) for (_, y_e) in eval_stacks.values()]
+    n, k, m = prog["n"], prog["k"], prog["m"]
+    t0, sched_np, eval_ns = prog["t0"], prog["sched_np"], prog["eval_ns"]
+    rb = _resid_wire_bytes(config)
     if sched_np is None:
-        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns)
+        bcast_b, gather_b = gal_round_bytes(n, k, m, eval_ns,
+                                            resid_dtype_bytes=rb)
     else:
         from repro.core.membership import membership_comm_ledger
-        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns)
+        bcast_l, gather_l = membership_comm_ledger(sched_np, n, k, eval_ns,
+                                                   resid_dtype_bytes=rb)
         bcast_b, gather_b = bcast_l[t0:], gather_l[t0:]
-    out = _finalize(outs, init, masked, config.rounds - t0, dims, pad_to,
+    out = _finalize(outs, init, prog["masked"], config.rounds - t0,
+                    prog["dims"], prog["pad_to"],
                     comm={"comm_broadcast_bytes": bcast_b,
                           "comm_gather_bytes": gather_b,
                           "model_memories": gal_model_memories(
@@ -912,6 +1179,20 @@ def fit_shard(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray, loss: Loss,
                      "f_evals": carry[1], "key": carry[2],
                      "active": carry[3], "state": {}}
     return out
+
+
+def lower_shard_round(rng: jax.Array, orgs: Sequence[Any], y: jnp.ndarray,
+                      loss: Loss, config: Any,
+                      eval_sets: Optional[Dict[str, tuple]] = None,
+                      metrics: Optional[Dict[str, Callable]] = None):
+    """Lower — without executing — the exact compiled program ``fit_shard``
+    would run, returning the ``jax.stages.Lowered`` handle. Roofline's
+    ``collective_bytes_from_hlo`` / ``hlo_stats.analyze`` read its HLO
+    (``.as_text()``) to attribute collective traffic; see
+    ``roofline.analysis.gal_shard_round_collectives`` for the mapping from
+    those per-partition HLO bytes to the protocol ledger's ints."""
+    prog = _shard_program(rng, orgs, y, loss, config, eval_sets, metrics)
+    return prog["jit"].lower(*prog["operands"])
 
 
 def grouped_predict(groups: Sequence[Any], group_params: Sequence[Any],

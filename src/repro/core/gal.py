@@ -135,6 +135,17 @@ class GALConfig:
     privacy: Optional[str] = None      # None | dp | ip
     privacy_alpha: float = 1.0
     privacy_intervals: int = 1
+    # wire dtype of the step-2 residual broadcast: "bf16" casts the
+    # privatized residual to bfloat16 BEFORE it leaves Alice (halving the
+    # ledgered comm_broadcast_bytes exactly) and upcasts after; every
+    # engine applies the identical cast, so they stay draw-for-draw equal
+    # under compression too. "float32" is the uncompressed protocol.
+    residual_dtype: str = "float32"    # float32 | bf16
+    # org-sharded engine only: shard each org's N training rows across a
+    # second "data" mesh axis (device_count must factor as org-axis size x
+    # data_shards; see launch.mesh.org_mesh_eligible). The per-round local
+    # fits, weight fit, and eta line search reduce across it.
+    data_shards: int = 1
     # dynamic-membership fault injection (core/membership.py): each org
     # independently skips each round with probability straggler_sim, from a
     # schedule seeded by straggler_seed (deterministic per config; rounds
@@ -344,11 +355,32 @@ def fit(rng: jax.Array, orgs: List[Organization], y: jnp.ndarray, loss: Loss,
     uncompilable set raises that reason verbatim."""
     if config.engine not in ("auto", "python") + _COMPILED_ENGINES:
         raise ValueError(f"unknown engine {config.engine!r}")
+    if config.residual_dtype not in ("float32", "fp32", "bf16", "bfloat16"):
+        raise ValueError(
+            f"unknown residual_dtype {config.residual_dtype!r}: "
+            "expected 'float32' or 'bf16'")
+    if config.data_shards < 1:
+        raise ValueError(f"data_shards must be >= 1, got "
+                         f"{config.data_shards}")
+    if config.data_shards > 1 and config.engine not in ("auto", "shard"):
+        raise ValueError(
+            f"data_shards={config.data_shards} needs the org-sharded "
+            f"engine (its 'data' mesh axis); engine={config.engine!r} "
+            "cannot honor it — use engine='shard' or 'auto'")
     for org in orgs:
         org.reset_round_state()  # a refit must not read stale round params
     metric_map = _resolve_metrics(metric_fn, metrics, eval_sets)
     plan = plan_orgs(orgs, eval_sets,
                      probe_shape=(int(y.shape[0]), int(y.shape[-1])))
+    if config.data_shards > 1 and not (
+            plan.compiled and plan.homogeneous
+            and org_mesh_eligible(len(orgs), config.data_shards)):
+        raise ValueError(
+            f"data_shards={config.data_shards} needs a homogeneous org set "
+            f"on an (org x data) mesh: {len(orgs)} orgs over "
+            f"{jax.device_count()} devices / {config.data_shards} data "
+            f"shard(s) is not eligible "
+            f"({plan.reason or 'see launch.mesh.org_mesh_eligible'})")
     from repro.core.membership import resolve_membership
     sched = resolve_membership(membership, config.straggler_sim,
                                config.straggler_seed, config.rounds,
@@ -487,7 +519,8 @@ def _dispatch_compiled(rng, orgs, y, loss, config, eval_sets, metric_map,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
                          resume=resume, membership=membership)
     # auto: most capable engine that applies
-    if plan.homogeneous and org_mesh_eligible(len(orgs)):
+    if plan.homogeneous and org_mesh_eligible(len(orgs),
+                                              config.data_shards):
         return _fit_fast(engine_mod.fit_shard, "shard", plan,
                          rng, orgs, y, loss, config, eval_sets, metric_map,
                          resume=resume, membership=membership)
@@ -635,15 +668,17 @@ def _prepare_resume(art: GALResult, orgs, plan: ExecutionPlan, y, loss,
             f"rounds (got rounds={config.rounds}); the artifact already "
             f"serves predictions for every fitted round prefix")
     if art.config is not None:
-        a = _dc.replace(art.config, rounds=0, engine="auto")
-        b = _dc.replace(config, rounds=0, engine="auto")
+        # rounds/engine/data_shards are run-placement knobs, free to change
+        # on resume; everything else (residual_dtype included) is protocol
+        a = _dc.replace(art.config, rounds=0, engine="auto", data_shards=1)
+        b = _dc.replace(config, rounds=0, engine="auto", data_shards=1)
         if a != b:
             diff = [f.name for f in _dc.fields(GALConfig)
                     if getattr(a, f.name) != getattr(b, f.name)]
             raise ValueError(
                 f"resume config mismatch on {diff}: the resumed rounds "
                 f"must draw from the same protocol as the fitted ones "
-                f"(only rounds and engine may change)")
+                f"(only rounds, engine and data_shards may change)")
     if loss_spec(loss) != loss_spec(art.loss):
         raise ValueError(
             f"resume loss mismatch: artifact was fit with "
@@ -843,13 +878,17 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics,
     # convention, same formulas as the fused engines) — appended per
     # EXECUTED round so early stopping trims them like the fused engines do
     eval_ns = [int(y_e.shape[0]) for (_, y_e) in (eval_sets or {}).values()]
+    from repro.core.engine import _resid_wire_bytes
+    rb = _resid_wire_bytes(config)
     if membership is None:
-        bcast_b, gather_b = gal_round_bytes(n, k, len(orgs), eval_ns)
+        bcast_b, gather_b = gal_round_bytes(n, k, len(orgs), eval_ns,
+                                            resid_dtype_bytes=rb)
         bcast_l = gather_l = None
     else:
         from repro.core.membership import membership_comm_ledger
         bcast_l, gather_l = membership_comm_ledger(membership, n, k,
-                                                   eval_ns)
+                                                   eval_ns,
+                                                   resid_dtype_bytes=rb)
     memories = gal_model_memories(config.rounds, [org.dms for org in orgs],
                                   membership=membership)
     hist["comm_broadcast_bytes"] = []
@@ -861,11 +900,15 @@ def _fit_python(rng, orgs, y, loss, config, eval_sets, metrics,
         rng, k_round = jax.random.split(rng)
         # 1. pseudo-residual
         residual = loss.residual(y, f_train)
-        # 2. broadcast (privatized in hindsight if configured)
+        # 2. broadcast (privatized in hindsight if configured); under
+        # residual_dtype="bf16" the wire carries bfloat16 — round-trip the
+        # cast so the oracle sees exactly what the compiled engines see
         r_bcast = apply_privacy(
             jax.random.fold_in(k_round, 13), residual, config.privacy,
             alpha=config.privacy_alpha, n_intervals=config.privacy_intervals,
         )
+        if rb == 2:
+            r_bcast = r_bcast.astype(jnp.bfloat16).astype(residual.dtype)
         # 3. parallel local fits
         preds = jnp.stack([
             org.fit_round(jax.random.fold_in(k_round, org.index), r_bcast,

@@ -77,15 +77,19 @@ def resolve_membership(membership, straggler_sim: Optional[float],
 
 
 def membership_comm_ledger(sched: np.ndarray, n: int, k: int,
-                           eval_ns=()) -> tuple:
+                           eval_ns=(),
+                           resid_dtype_bytes: int | None = None) -> tuple:
     """Per-round (broadcast, gather) byte lists under a membership
     schedule: only the live orgs of round t receive the residual and ship
     fitted values back, so a masked round's ledger equals the reduced org
-    set's ledger exactly, and an all-live round's equals the static one."""
+    set's ledger exactly, and an all-live round's equals the static one.
+    ``resid_dtype_bytes`` is the on-the-wire residual width (2 under
+    ``residual_dtype="bf16"``), threaded through to ``gal_round_bytes``."""
     from repro.core.protocol_sim import gal_round_bytes
     bcast, gather = [], []
     for row in np.asarray(sched, bool):
-        b, g = gal_round_bytes(n, k, int(row.sum()), eval_ns)
+        b, g = gal_round_bytes(n, k, int(row.sum()), eval_ns,
+                               resid_dtype_bytes=resid_dtype_bytes)
         bcast.append(b)
         gather.append(g)
     return bcast, gather

@@ -33,22 +33,30 @@ class ProtocolCost:
 
 
 def gal_round_bytes(n: int, k: int, m: int, eval_ns=(),
-                    dtype_bytes: int = 4) -> tuple:
+                    dtype_bytes: int = 4,
+                    resid_dtype_bytes: int | None = None) -> tuple:
     """Bytes crossing org boundaries in ONE assistance round, Table-14
     convention: Alice ships the privatized residual to the other M-1 orgs;
     all M orgs — Alice included — ship their fitted values back for the
     train set AND for each eval prediction stage (``eval_ns`` lists the
     eval-set row counts). Returns ``(broadcast, gathered)`` as exact ints.
 
+    ``resid_dtype_bytes`` is the on-the-wire width of the residual
+    broadcast alone (``GALConfig(residual_dtype="bf16")`` casts it to 2
+    bytes before it leaves Alice); the gathered fitted values always travel
+    at ``dtype_bytes``. Defaults to ``dtype_bytes`` — the uncompressed
+    protocol.
+
     This is the ONE source of the engines' per-round communication ledger
     (``history["comm_broadcast_bytes"/"comm_gather_bytes"]``): the
     org-sharded engine's numbers come from the same static collective
     operand shapes, and the scan / grouped / Python engines simulate the
     identical wire protocol, so the ledger is engine-independent."""
-    resid = n * k * dtype_bytes
-    broadcast = (m - 1) * resid
-    gathered = m * resid + sum(m * int(ne) * k * dtype_bytes
-                               for ne in eval_ns)
+    if resid_dtype_bytes is None:
+        resid_dtype_bytes = dtype_bytes
+    broadcast = (m - 1) * n * k * resid_dtype_bytes
+    gathered = m * n * k * dtype_bytes + sum(m * int(ne) * k * dtype_bytes
+                                             for ne in eval_ns)
     return broadcast, gathered
 
 

@@ -42,7 +42,11 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
                 loss: Callable, epochs: int = 100, lr: float = 0.1,
                 weight_decay: float = 5e-4,
                 mask: Optional[jnp.ndarray] = None,
-                org_ids: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                org_ids: Optional[jnp.ndarray] = None,
+                m: Optional[int] = None,
+                combine_fn: Optional[Callable] = None,
+                objective_fn: Optional[Callable] = None,
+                grad_axes: tuple = ()) -> jnp.ndarray:
     """preds: (M, N, K) stacked org outputs; returns w in the M-simplex.
 
     Pure lax-scan Adam: traces once inside the fused engine's round step.
@@ -60,8 +64,29 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
     ``mask`` is the (M,) membership row for this round (None = all live):
     masked orgs get weight exactly 0.0 and contribute nothing — not even
     fp association noise — to the objective or to any live org's gradient.
+
+    Distributed form (the block-sharded engine): ``combine_fn(w)`` replaces
+    the replicated einsum with the caller's own combination of the FULL
+    (M,)-simplex ``w`` against block-local predictions — typically a
+    ``dynamic_slice`` of ``w`` at the device's block offset, a local
+    einsum, and a psum over the "org" mesh axis.  Because the slice's
+    gradient transpose scatters into zeros, each device's theta-gradient is
+    block-local only, so the per-step gradient MUST be summed over
+    ``grad_axes`` (mesh axis names) to recover the replicated trajectory;
+    ``m`` pins the simplex size when ``preds`` no longer carries it.
+
+    ``objective_fn(w)`` replaces the loss evaluation entirely (it takes
+    precedence over ``combine_fn``): the caller supplies a scalar whose
+    gradient, summed over ``grad_axes``, equals the replicated objective's.
+    This is how the block-sharded engine runs the quadratic (alice_q == 2)
+    fit on per-block Gram statistics — O(B*M) per Adam epoch with a single
+    (M,) collective, instead of re-materializing the (N, K) combination
+    every epoch. The per-device VALUE may be a partial sum (Adam only ever
+    consumes the gradient). The default arguments leave the replicated
+    path untouched.
     """
-    m = preds.shape[0]
+    if m is None:
+        m = preds.shape[0]
     if org_ids is None:
         org_ids = jnp.arange(m, dtype=jnp.uint32)
     if mask is None:
@@ -72,7 +97,12 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
 
     def objective(theta):
         w = _masked_softmax(theta, mask)
-        combined = jnp.einsum("m,mnk->nk", w, preds)
+        if objective_fn is not None:
+            return objective_fn(w)
+        if combine_fn is not None:
+            combined = combine_fn(w)
+        else:
+            combined = jnp.einsum("m,mnk->nk", w, preds)
         return loss(residual, combined)
 
     opt = adam(lr, weight_decay=weight_decay)
@@ -81,6 +111,8 @@ def fit_weights(rng: jax.Array, residual: jnp.ndarray, preds: jnp.ndarray,
     def step(carry, _):
         theta, st = carry
         g = jax.grad(objective)(theta)
+        for ax in grad_axes:
+            g = jax.lax.psum(g, ax)
         upd, st = opt.update(g, st, theta)
         return (apply_updates(theta, upd), st), None
 

@@ -164,14 +164,25 @@ def unstack_groups(stacks: Sequence[jnp.ndarray],
 
 
 def pad_and_stack_sharded(xs: Sequence[jnp.ndarray], mesh,
-                          pad_to: int | None = None) -> tuple:
+                          pad_to: int | None = None, block_size: int = 1,
+                          shard_data: bool = False) -> tuple:
     """``pad_and_stack`` + placement: split the org-major stack over the
-    mesh's "org" axis, one organization's padded slice per device.
+    mesh's "org" axis — one organization's padded slice per device under
+    one-to-one placement, or a contiguous block of ``block_size`` orgs per
+    device under block placement.  ``shard_data`` further splits each
+    org's rows over the mesh's "data" axis.
 
     This is the data layout of the org-sharded GAL engine — org m's
-    vertical slice physically lives on device m, mirroring the paper's
-    decentralized sites; only the round collectives (residual broadcast,
-    fitted-value gather) cross the device boundary."""
+    vertical slice physically lives on its block's device, mirroring the
+    paper's decentralized sites; only the round collectives (residual
+    broadcast, fitted-value gather) cross the device boundary."""
     from repro.launch.sharding import org_stack_sharding
     stack, dims = pad_and_stack(xs, pad_to=pad_to)
-    return jax.device_put(stack, org_stack_sharding(mesh, stack.ndim)), dims
+    orgs_held = mesh.shape["org"] * block_size
+    if stack.shape[0] != orgs_held:
+        raise ValueError(
+            f"{stack.shape[0]} orgs cannot block-shard onto an org axis of "
+            f"{mesh.shape['org']} devices holding {block_size} orgs each")
+    sharding = org_stack_sharding(mesh, stack.ndim, block_size=block_size,
+                                  shard_data=shard_data)
+    return jax.device_put(stack, sharding), dims

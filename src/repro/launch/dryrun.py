@@ -21,7 +21,7 @@ from pathlib import Path
 import jax
 
 from repro.configs import SHAPES, arch_names, get_arch
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_device_mesh, production_mesh_spec
 from repro.launch import sharding as shd
 from repro.launch.specs import (
     abstract_params, config_for_shape, input_specs, train_batch_specs,
@@ -54,7 +54,7 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
         microbatch = 2 if shape.kind == "train" else 1
     cfg = replace(cfg, remat=remat, attn_chunk=attn_chunk,
                   remat_group=remat_group)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = make_device_mesh(*production_mesh_spec(multi_pod=multi_pod))
     n_chips = mesh.size
     from repro.models import pspec as act_hints
     act_hints.set_mesh(mesh)   # activation with_sharding_constraint policy

@@ -292,14 +292,14 @@ def main() -> None:
     from repro.configs import get_arch
     from repro.configs.base import InputShape
     from repro.launch import sharding as shd
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_device_mesh
     from repro.models import pspec as act_hints
     from repro.models import transformer as tfm
     from repro.train.steps import make_serve_step
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     shape = tuple(int(x) for x in args.mesh.split(","))
-    mesh = make_test_mesh(shape, ("data", "model"))
+    mesh = make_device_mesh(shape, ("data", "model"))
     act_hints.set_mesh(mesh)
 
     key = jax.random.PRNGKey(0)

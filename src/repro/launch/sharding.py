@@ -229,10 +229,26 @@ def token_sharding(mesh, token_spec, shape: InputShape):
     return NamedSharding(mesh, P(dp if ok else None, None))
 
 
-def org_stack_sharding(mesh, ndim: int) -> NamedSharding:
+def org_stack_sharding(mesh, ndim: int, block_size: int = 1,
+                       shard_data: bool = False) -> NamedSharding:
     """Org-major stacked arrays (M, ...): leading dim split over the "org"
-    axis so each organization's slice / params / fits live on its device."""
-    return NamedSharding(mesh, P(*(["org"] + [None] * (ndim - 1))))
+    axis.  Under one-to-one placement (``block_size == 1``) each
+    organization's slice / params / fits live on their own device; under
+    block placement a contiguous block of ``block_size`` orgs shares a
+    device.  ``shard_data`` additionally splits the second (row) dim over
+    the mesh's "data" axis for large local datasets."""
+    if block_size < 1:
+        raise ValueError(f"block_size must be >= 1, got {block_size}")
+    tail = [None] * (ndim - 1)
+    if shard_data:
+        if "data" not in mesh.axis_names:
+            raise ValueError("shard_data=True needs a mesh with a 'data' "
+                             f"axis, got axes {mesh.axis_names}")
+        if ndim < 2:
+            raise ValueError("shard_data=True needs a row dimension to "
+                             f"shard, got ndim={ndim}")
+        tail[0] = "data"
+    return NamedSharding(mesh, P("org", *tail))
 
 
 def org_replicated(mesh) -> NamedSharding:

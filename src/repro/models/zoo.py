@@ -40,7 +40,13 @@ from repro.utils.registry import Registry
 ZOO: Registry = Registry("local model")
 
 
-def _fit_adam(rng, params, loss_of_params, epochs: int, lr: float):
+def _fit_adam(rng, params, loss_of_params, epochs: int, lr: float,
+              axis_name=None):
+    # axis_name: mesh axis the training rows are sharded over (the GAL
+    # engine's "data" axis). loss_of_params is then the LOCAL shard's mean
+    # loss; averaging the per-shard gradients over equal shards recovers
+    # the global full-batch gradient, so the Adam trajectory is the
+    # single-shard one up to fp summation order.
     opt = adam(lr)
     state = opt.init(params)
 
@@ -48,6 +54,10 @@ def _fit_adam(rng, params, loss_of_params, epochs: int, lr: float):
     def step(carry, _):
         params, state = carry
         grads = jax.grad(loss_of_params)(params)
+        if axis_name is not None:
+            shards = jax.lax.psum(1, axis_name)
+            grads = jax.tree_util.tree_map(
+                lambda g: jax.lax.psum(g, axis_name) / shards, grads)
         upd, state = opt.update(grads, state, params)
         return (apply_updates(params, upd), state), None
 
@@ -70,6 +80,7 @@ def _dense(params, x):
 @dataclass(frozen=True)
 class Linear:
     scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    data_parallel = True  # fit accepts data_axis (rows sharded on a mesh)
     ridge: float = 1e-3
     epochs: int = 100          # used only for non-ell_2 local losses
     lr: float = 1e-2
@@ -85,21 +96,29 @@ class Linear:
     def apply(self, params, x):
         return _dense(params, x)
 
-    def fit(self, rng, x, r, local_loss):
+    def fit(self, rng, x, r, local_loss, data_axis=None):
         # the closed ridge form is ONLY the ell_2 solution; a custom loss
         # without a q exponent takes the generic Adam path (it is
         # differentiated directly, so any traceable loss compiles)
         q = getattr(local_loss, "q", None)
         if q == 2.0:
-            # closed-form ridge regression of residuals
+            # closed-form ridge regression of residuals; with the rows
+            # sharded over ``data_axis``, the gram matrix and rhs are
+            # sums over rows, so psumming the local partial sums yields
+            # the exact global normal equations
             n, d = x.shape
             xb = jnp.concatenate([x, jnp.ones((n, 1))], axis=1)
-            gram = xb.T @ xb + self.ridge * jnp.eye(d + 1)
-            sol = jnp.linalg.solve(gram, xb.T @ r)
+            gram = xb.T @ xb
+            rhs = xb.T @ r
+            if data_axis is not None:
+                gram = jax.lax.psum(gram, data_axis)
+                rhs = jax.lax.psum(rhs, data_axis)
+            sol = jnp.linalg.solve(gram + self.ridge * jnp.eye(d + 1), rhs)
             return {"w": sol[:-1], "b": sol[-1]}
         params = self.init(rng, x, r.shape[-1])
         return _fit_adam(
-            rng, params, lambda p: local_loss(r, _dense(p, x)), self.epochs, self.lr
+            rng, params, lambda p: local_loss(r, _dense(p, x)),
+            self.epochs, self.lr, axis_name=data_axis,
         )
 
 
@@ -107,6 +126,7 @@ class Linear:
 @dataclass(frozen=True)
 class MLP:
     scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    data_parallel = True  # fit accepts data_axis (rows sharded on a mesh)
     hidden: Sequence[int] = (64, 64)
     epochs: int = 200
     lr: float = 1e-2
@@ -137,11 +157,11 @@ class MLP:
     def apply(self, params, x):
         return _dense(params["head"], self.features(params, x))
 
-    def fit(self, rng, x, r, local_loss):
+    def fit(self, rng, x, r, local_loss, data_axis=None):
         params = self.init(rng, x, r.shape[-1])
         return _fit_adam(
             rng, params, lambda p: local_loss(r, self.apply(p, x)),
-            self.epochs, self.lr,
+            self.epochs, self.lr, axis_name=data_axis,
         )
 
 
@@ -271,6 +291,7 @@ def _conv_init(rng, cin, cout, ksize=3):
 class ConvNet:
     """Paper Table-8 CNN (conv+pool x4, GAP, linear), width-scaled for CPU."""
     scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    data_parallel = True  # fit accepts data_axis (rows sharded on a mesh)
     widths: Sequence[int] = (16, 32, 64, 64)
     epochs: int = 60
     lr: float = 1e-3
@@ -308,11 +329,11 @@ class ConvNet:
     def apply(self, params, x):
         return _dense(params["head"], self.features(params, x))
 
-    def fit(self, rng, x, r, local_loss):
+    def fit(self, rng, x, r, local_loss, data_axis=None):
         params = self.init(rng, x, r.shape[-1])
         return _fit_adam(
             rng, params, lambda p: local_loss(r, self.apply(p, x)),
-            self.epochs, self.lr,
+            self.epochs, self.lr, axis_name=data_axis,
         )
 
 
@@ -321,6 +342,7 @@ class ConvNet:
 class GRUNet:
     """GRU over (N, T, D) series + linear head (MIMIC-like case study)."""
     scan_safe = True  # pure-jnp fit/apply: safe under jit/vmap
+    data_parallel = True  # fit accepts data_axis (rows sharded on a mesh)
     hidden_size: int = 32
     epochs: int = 120
     lr: float = 3e-3
@@ -362,11 +384,11 @@ class GRUNet:
     def apply(self, params, x):
         return _dense(params["head"], self.features(params, x))
 
-    def fit(self, rng, x, r, local_loss):
+    def fit(self, rng, x, r, local_loss, data_axis=None):
         params = self.init(rng, x, r.shape[-1])
         return _fit_adam(
             rng, params, lambda p: local_loss(r, self.apply(p, x)),
-            self.epochs, self.lr,
+            self.epochs, self.lr, axis_name=data_axis,
         )
 
 

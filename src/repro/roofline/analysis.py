@@ -87,6 +87,89 @@ def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def gal_shard_round_collectives(n: int, k: int, m: int, rounds: int,
+                                eval_ns=(), weight_epochs: int = 100,
+                                block_size: int = 1, data_shards: int = 1,
+                                dtype_bytes: int = 4,
+                                alice_quadratic: bool = True
+                                ) -> Dict[str, int]:
+    """Expected per-partition collective bytes of the compiled org-sharded
+    GAL fit (``core.engine.lower_shard_round`` -> ``hlo_stats.analyze``),
+    decomposed so tests can reconcile the compiler's traffic with the
+    protocol ledger (``core.protocol_sim.gal_round_bytes``):
+
+      all_gather            step-3 fitted-value gather, (M, N/ds, K) result
+                            per round. EXACT under every placement. The
+                            ledger's train-set gather is the same tensor
+                            counted once per data shard:
+                            ``ledger_train_gather == data_shards * all_gather``.
+      all_reduce_broadcast  step-2 residual psum from Alice's device,
+                            (N/ds, K) per round. The ledger's broadcast is
+                            per-receiver-link: ``ledger_broadcast ==
+                            (m - 1) * data_shards * all_reduce_broadcast``
+                            at fp32. NOTE ``residual_dtype="bf16"`` does NOT
+                            shrink this number: XLA folds the bf16 upcast
+                            into the all-reduce producer, so the simulated
+                            collective stays f32 — the 2-byte width is a
+                            wire-protocol (ledger) property of real
+                            cross-org links, not of the single-host psum.
+      all_reduce_direction  step-6 weighted org-sum of fitted values.
+      all_reduce_evals      per-eval-set combines (weighted sums, so
+                            (N_e, K) — the ledger instead books the
+                            protocol's M per-org shipments, M * N_e * K).
+      all_reduce_weight_fit step-4 distributed assistance-weight fit. For
+                            block placement with the quadratic alice loss
+                            (the alice_q=2 default) the fit runs on
+                            per-block Gram statistics, so each epoch moves
+                            ONLY the (M,) gradient psum per sharded mesh
+                            axis — no (N, K) tensor crosses the mesh inside
+                            the epoch loop. A non-quadratic alice loss
+                            (``alice_quadratic=False``) keeps the
+                            combine-and-psum objective: one forward (N/ds,
+                            K) psum per epoch (its backward transpose is
+                            eliminated by a stop_gradient identity) plus
+                            the (M,) psums. Zero for 1:1 placement on an
+                            un-sharded data axis — the weight fit is then
+                            replicated.
+      all_reduce            sum of the above. EXACT when data_shards == 1;
+                            a LOWER bound when the data axis is sharded
+                            (the psum'd global-mean loss adds a few bytes
+                            of scalar sync per line-search/loss call that
+                            we do not model).
+      all_reduce_exact      whether ``all_reduce`` is exact or a bound.
+
+    Verified against the compiled HLO in tests/test_roofline_engine.py."""
+    if data_shards < 1 or n % data_shards:
+        raise ValueError(f"data_shards {data_shards} must divide n {n}")
+    db = dtype_bytes
+    n_l = n // data_shards
+    axes = (1 if block_size > 1 else 0) + (1 if data_shards > 1 else 0)
+    if block_size > 1:
+        if alice_quadratic and data_shards == 1:
+            # Gram fast path: the epoch loop is collective-free except for
+            # the per-axis (M,) gradient psum
+            wfit_round = weight_epochs * (axes * m * db)
+        else:
+            wfit_round = weight_epochs * (n_l * k * db + axes * m * db)
+    elif data_shards > 1:
+        wfit_round = weight_epochs * (m * db)   # (M,) grad psum over "data"
+    else:
+        wfit_round = 0
+    out = {
+        "all_gather": rounds * m * n_l * k * db,
+        "all_reduce_broadcast": rounds * n_l * k * db,
+        "all_reduce_direction": rounds * n_l * k * db,
+        "all_reduce_evals": rounds * sum(int(ne) * k * db for ne in eval_ns),
+        "all_reduce_weight_fit": rounds * wfit_round,
+        "all_reduce_exact": data_shards == 1,
+    }
+    out["all_reduce"] = (out["all_reduce_broadcast"]
+                         + out["all_reduce_direction"]
+                         + out["all_reduce_evals"]
+                         + out["all_reduce_weight_fit"])
+    return out
+
+
 def model_flops(cfg: ModelConfig, shape: InputShape, train: bool = True) -> float:
     """Analytic MODEL_FLOPS: 6*N_active*D for training, 2*N_active*D for
     inference forward (D = tokens processed)."""

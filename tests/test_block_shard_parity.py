@@ -1,0 +1,245 @@
+"""Block placement (orgs-per-device) and the data mesh axis vs the scan
+fast path.
+
+With more organizations than devices the org mesh packs a contiguous block
+of B = M / device_count orgs per device; with ``data_shards`` the mesh
+gains a second axis splitting each org's N rows. Both distribute the
+step-4 assistance-weight fit (per-epoch gradient psums), so unlike the 1:1
+placement — whose collectives reproduce the scan engine's arithmetic
+bit-for-bit — the block/data paths reassociate floating-point sums inside
+100 Adam epochs. The parity tolerances here are the empirically measured
+chaos envelope (~1e-2 on etas/weights, <1% on losses), NOT loose bounds:
+a placement bug shows up at O(0.1–1), an RNG-discipline bug at O(1).
+
+Within one placement everything stays exact: membership masking, ledgers,
+and schedule plumbing are pinned bitwise against the same engine.
+
+Run with REPRO_FORCE_DEVICES=4; on a single device the suite skips.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import gal
+from repro.core.engine import shard_eligible
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.membership import membership_comm_ledger
+from repro.core.organizations import make_orgs
+from repro.core.protocol_sim import gal_round_bytes
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.models.zoo import Linear, StumpBoost
+
+D = 4
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() != D,
+    reason=f"block/data placement cells are calibrated for "
+           f"REPRO_FORCE_DEVICES={D}")
+
+# chaos envelope: psum reassociation amplified by the distributed weight
+# fit's Adam epochs (see module docstring)
+ETA_TOL = dict(rtol=0.05, atol=0.05)
+HIST_TOL = dict(rtol=0.05, atol=0.01)
+W_ATOL = 0.08   # late rounds compound the drift; a real bug shows O(0.3+)
+
+
+def _setting(rng_np, m, d=None, n=200):
+    ds = make_regression(rng_np, n=n, d=d or 3 * m)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, m), tr.y, split_features(te.x, m), te.y
+
+
+def _fit(key, xs, y, cfg, model=None, **kw):
+    return gal.fit(key, make_orgs(xs, model or Linear()), y,
+                   get_loss("mse"), cfg, **kw)
+
+
+def _assert_parity(res_sc, res_sh):
+    np.testing.assert_allclose(res_sh.etas, res_sc.etas, **ETA_TOL)
+    np.testing.assert_allclose(np.stack(res_sh.weights),
+                               np.stack(res_sc.weights), atol=W_ATOL)
+    np.testing.assert_allclose(res_sh.history["train_loss"],
+                               res_sc.history["train_loss"], **HIST_TOL)
+
+
+# -------------------------------------------------------- block placement
+
+@needs_mesh
+@pytest.mark.parametrize("m", [8, 16])
+def test_block_placement_parity_vs_scan(rng_np, key, m):
+    xs, y, xs_te, y_te = _setting(rng_np, m)
+    ev = {"test": (xs_te, y_te)}
+    cfg = GALConfig(rounds=4)
+    res_sc = _fit(key, xs, y, dataclasses.replace(cfg, engine="scan"),
+                  eval_sets=ev)
+    res_sh = _fit(key, xs, y, dataclasses.replace(cfg, engine="shard"),
+                  eval_sets=ev)
+    assert res_sh.engine == "shard"
+    _assert_parity(res_sc, res_sh)
+    np.testing.assert_allclose(res_sh.history["test_loss"],
+                               res_sc.history["test_loss"], **HIST_TOL)
+    # per-round params keep the scan path's stacked (T, M, ...) contract
+    leaves = jax.tree_util.tree_leaves(res_sh.stacked_params)
+    assert all(l.shape[:2] == (4, m) for l in leaves)
+
+
+@needs_mesh
+def test_auto_prefers_shard_for_block_eligible_orgs(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 8)
+    orgs = make_orgs(xs, Linear())
+    assert shard_eligible(orgs)
+    res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=2))
+    assert res.engine == "shard"
+
+
+@needs_mesh
+def test_block_predictions_track_scan(rng_np, key):
+    xs, y, xs_te, _ = _setting(rng_np, 8)
+    res_sc = _fit(key, xs, y, GALConfig(rounds=4, engine="scan"))
+    res_sh = _fit(key, xs, y, GALConfig(rounds=4, engine="shard"))
+    p_sc = np.asarray(res_sc.predict(xs_te))
+    p_sh = np.asarray(res_sh.predict(xs_te))
+    np.testing.assert_allclose(p_sh, p_sc, rtol=0.1, atol=0.15)
+
+
+@needs_mesh
+def test_block_ledger_is_engine_independent(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np, 8)
+    ev = {"test": (xs_te, y_te)}
+    res_sc = _fit(key, xs, y, GALConfig(rounds=3, engine="scan"),
+                  eval_sets=ev)
+    res_sh = _fit(key, xs, y, GALConfig(rounds=3, engine="shard"),
+                  eval_sets=ev)
+    b, g = gal_round_bytes(y.shape[0], y.shape[-1], 8,
+                           eval_ns=(y_te.shape[0],))
+    assert res_sh.history["comm_broadcast_bytes"] == [b] * 3 == \
+        res_sc.history["comm_broadcast_bytes"]
+    assert res_sh.history["comm_gather_bytes"] == [g] * 3 == \
+        res_sc.history["comm_gather_bytes"]
+
+
+# ------------------------------------------------- bf16 conformance cell
+
+@needs_mesh
+def test_bf16_toggle_under_block_placement(rng_np, key):
+    """Compression composes with block placement: parity vs the scan
+    engine's bf16 run holds to the same chaos envelope, and the ledger
+    halves the broadcast exactly."""
+    xs, y, _, _ = _setting(rng_np, 8)
+    cfg16 = GALConfig(rounds=4, residual_dtype="bf16")
+    res_sc = _fit(key, xs, y, dataclasses.replace(cfg16, engine="scan"))
+    res_sh = _fit(key, xs, y, dataclasses.replace(cfg16, engine="shard"))
+    _assert_parity(res_sc, res_sh)
+    res_32 = _fit(key, xs, y, GALConfig(rounds=4, engine="shard"))
+    assert [b * 2 for b in res_sh.history["comm_broadcast_bytes"]] == \
+        res_32.history["comm_broadcast_bytes"]
+    assert res_sh.history["comm_gather_bytes"] == \
+        res_32.history["comm_gather_bytes"]
+
+
+# --------------------------------------------------- membership / contrib
+
+@needs_mesh
+def test_block_membership_explicit_all_live_is_bitwise_noop(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 8)
+    res_none = _fit(key, xs, y, GALConfig(rounds=3, engine="shard"))
+    res_live = _fit(key, xs, y, GALConfig(rounds=3, engine="shard"),
+                    membership=np.ones((3, 8), bool))
+    assert res_none.etas == res_live.etas
+    assert res_none.history["train_loss"] == res_live.history["train_loss"]
+    assert np.array_equal(np.stack(res_none.weights),
+                          np.stack(res_live.weights))
+
+
+@needs_mesh
+def test_block_membership_masks_weights_and_ledger(rng_np, key):
+    """An org absent in round t gets weight exactly 0.0 there and drops out
+    of that round's ledger — under block placement too."""
+    m, rounds = 8, 3
+    xs, y, _, _ = _setting(rng_np, m)
+    sched = np.ones((rounds, m), bool)
+    sched[1, 2] = False
+    sched[2, 5] = False
+    res = _fit(key, xs, y, GALConfig(rounds=rounds, engine="shard"),
+               membership=sched)
+    assert res.engine == "shard"
+    w = np.stack(res.weights)
+    assert w[1, 2] == 0.0 and w[2, 5] == 0.0
+    assert (w[0] > 0).all()
+    eb, eg = membership_comm_ledger(sched, y.shape[0], y.shape[-1])
+    assert res.history["comm_broadcast_bytes"] == eb
+    assert res.history["comm_gather_bytes"] == eg
+
+
+@needs_mesh
+def test_block_straggler_sim_is_deterministic(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 8)
+    cfg = GALConfig(rounds=3, engine="shard", straggler_sim=0.3,
+                    straggler_seed=7)
+    r1 = _fit(key, xs, y, cfg)
+    r2 = _fit(key, xs, y, cfg)
+    assert r1.etas == r2.etas
+    assert r1.history["comm_broadcast_bytes"] == \
+        r2.history["comm_broadcast_bytes"]
+
+
+# ----------------------------------------------------------- data axis
+
+@needs_mesh
+@pytest.mark.parametrize("m", [2, 4])
+def test_data_axis_parity_vs_scan(rng_np, key, m):
+    """data_shards=2 on 4 devices: m=2 is 1:1 x data, m=4 is block x data
+    (both mesh axes live). The per-round weight fit and eta line search
+    reduce across the data axis."""
+    xs, y, xs_te, y_te = _setting(rng_np, m, d=12)
+    ev = {"test": (xs_te, y_te)}
+    cfg = GALConfig(rounds=4, data_shards=2)
+    res_sc = _fit(key, xs, y, GALConfig(rounds=4, engine="scan"),
+                  eval_sets=ev)
+    res_sh = _fit(key, xs, y, dataclasses.replace(cfg, engine="shard"),
+                  eval_sets=ev)
+    assert res_sh.engine == "shard"
+    _assert_parity(res_sc, res_sh)
+    # the ledger is a wire-protocol property: slicing rows across devices
+    # does not change what crosses org boundaries
+    assert res_sh.history["comm_broadcast_bytes"] == \
+        res_sc.history["comm_broadcast_bytes"]
+
+
+@needs_mesh
+def test_data_axis_rejects_privacy(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 2, d=12)
+    with pytest.raises(ValueError, match="privat"):
+        _fit(key, xs, y, GALConfig(rounds=1, engine="shard", data_shards=2,
+                                   privacy="dp"))
+
+
+@needs_mesh
+def test_data_axis_rejects_non_data_parallel_model(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 2, d=12)
+    with pytest.raises(ValueError, match="data_parallel"):
+        _fit(key, xs, y, GALConfig(rounds=1, engine="shard", data_shards=2),
+             model=StumpBoost())
+
+
+@needs_mesh
+def test_data_axis_rejects_indivisible_rows(rng_np, key):
+    xs, y, _, _ = _setting(rng_np, 2, d=12, n=200)
+    n = y.shape[0]
+    xs = [x[: n - 1] for x in xs]
+    with pytest.raises(ValueError):
+        _fit(key, xs, y[: n - 1],
+             GALConfig(rounds=1, engine="shard", data_shards=2))
+
+
+def test_data_shards_validation_is_engine_gated(rng_np, key):
+    """Runs in ANY device configuration: data_shards > 1 demands the shard
+    engine (or auto resolving to it); the scan engine must refuse."""
+    xs, y, _, _ = _setting(rng_np, 2, d=12)
+    with pytest.raises(ValueError, match="data_shards"):
+        _fit(key, xs, y, GALConfig(rounds=1, engine="scan", data_shards=2))
+    with pytest.raises(ValueError, match="data_shards"):
+        _fit(key, xs, y, GALConfig(rounds=1, data_shards=0))

@@ -1,0 +1,123 @@
+"""Compressed residual broadcast (``GALConfig(residual_dtype="bf16")``).
+
+The knob is a WIRE property of Algorithm 1's step-2 broadcast: the
+privatized residual is cast to bfloat16 before it leaves Alice and upcast
+on arrival, so every engine sees the identical rounded values and the
+draw-for-draw cross-engine contract survives compression. The ledger books
+the reduced exact bytes (2-byte residual width); the fitted-value gather
+is untouched. The fp32 default must stay bitwise what it always was.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.membership import membership_comm_ledger
+from repro.core.organizations import make_orgs
+from repro.core.protocol_sim import gal_round_bytes
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.models.zoo import Linear
+
+M = 4
+
+
+def _setting(rng_np, n=240, d=12):
+    ds = make_regression(rng_np, n=n, d=d)
+    tr, te = train_test_split(ds, rng_np)
+    return split_features(tr.x, M), tr.y, split_features(te.x, M), te.y
+
+
+def _fit(key, xs, y, cfg, **kw):
+    return gal.fit(key, make_orgs(xs, Linear()), y, get_loss("mse"), cfg,
+                   **kw)
+
+
+# ------------------------------------------------------------------- ledger
+
+def test_ledger_broadcast_exactly_halved():
+    b32, g32 = gal_round_bytes(1000, 3, 7, eval_ns=(100, 50))
+    b16, g16 = gal_round_bytes(1000, 3, 7, eval_ns=(100, 50),
+                               resid_dtype_bytes=2)
+    assert b32 == (7 - 1) * 1000 * 3 * 4
+    assert b16 * 2 == b32
+    assert g16 == g32 == 7 * 1000 * 3 * 4 + 7 * 100 * 3 * 4 + 7 * 50 * 3 * 4
+
+
+def test_engine_ledger_halves_broadcast_only(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    ev = {"test": (xs_te, y_te)}
+    r32 = _fit(key, xs, y, GALConfig(rounds=3, engine="scan"), eval_sets=ev)
+    r16 = _fit(key, xs, y, GALConfig(rounds=3, engine="scan",
+                                     residual_dtype="bf16"), eval_sets=ev)
+    assert [b * 2 for b in r16.history["comm_broadcast_bytes"]] == \
+        r32.history["comm_broadcast_bytes"]
+    assert r16.history["comm_gather_bytes"] == \
+        r32.history["comm_gather_bytes"]
+
+
+def test_membership_ledger_threads_resid_width():
+    sched = np.array([[True, True, False], [True, True, True]])
+    b16, g16 = membership_comm_ledger(sched, 100, 2, eval_ns=(10,),
+                                      resid_dtype_bytes=2)
+    b32, g32 = membership_comm_ledger(sched, 100, 2, eval_ns=(10,))
+    assert [b * 2 for b in b16] == b32
+    assert g16 == g32
+
+
+# ----------------------------------------------------------- engine parity
+
+def test_python_scan_draw_for_draw_under_bf16(rng_np, key):
+    xs, y, xs_te, y_te = _setting(rng_np)
+    cfg = GALConfig(rounds=4, residual_dtype="bf16")
+    res_py = _fit(key, xs, y, dataclasses.replace(cfg, engine="python"),
+                  eval_sets={"test": (xs_te, y_te)})
+    res_sc = _fit(key, xs, y, dataclasses.replace(cfg, engine="scan"),
+                  eval_sets={"test": (xs_te, y_te)})
+    np.testing.assert_allclose(res_sc.etas, res_py.etas, rtol=2e-4,
+                               atol=2e-4)
+    np.testing.assert_allclose(np.stack(res_sc.weights),
+                               np.stack(res_py.weights), atol=1e-4)
+    np.testing.assert_allclose(res_sc.history["train_loss"],
+                               res_py.history["train_loss"],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_fp32_default_and_alias_bitwise_identical(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    res_def = _fit(key, xs, y, GALConfig(rounds=3, engine="scan"))
+    res_fp = _fit(key, xs, y, GALConfig(rounds=3, engine="scan",
+                                        residual_dtype="fp32"))
+    assert res_def.etas == res_fp.etas
+    assert res_def.history["train_loss"] == res_fp.history["train_loss"]
+
+
+def test_bf16_actually_reaches_the_wire(rng_np, key):
+    """The cast must change SOMETHING — otherwise the knob is dead code."""
+    xs, y, _, _ = _setting(rng_np)
+    res32 = _fit(key, xs, y, GALConfig(rounds=3, engine="scan"))
+    res16 = _fit(key, xs, y, GALConfig(rounds=3, engine="scan",
+                                       residual_dtype="bf16"))
+    assert res32.history["train_loss"] != res16.history["train_loss"]
+
+
+def test_bf16_accuracy_gate(rng_np, key):
+    """The compressed run must land within 2% relative of the fp32 final
+    train loss — the acceptance gate for shipping bf16 as a default-off
+    optimization."""
+    xs, y, _, _ = _setting(rng_np)
+    res32 = _fit(key, xs, y, GALConfig(rounds=5, engine="scan"))
+    res16 = _fit(key, xs, y, GALConfig(rounds=5, engine="scan",
+                                       residual_dtype="bf16"))
+    f32, f16 = res32.history["train_loss"][-1], res16.history["train_loss"][-1]
+    assert abs(f16 - f32) <= 0.02 * abs(f32) + 1e-6
+
+
+def test_unknown_residual_dtype_rejected(rng_np, key):
+    xs, y, _, _ = _setting(rng_np)
+    with pytest.raises(ValueError, match="residual_dtype"):
+        _fit(key, xs, y, GALConfig(rounds=1, residual_dtype="f8"))

@@ -228,10 +228,11 @@ def test_fig4_protocol_on_shard_engine(rng_np, key):
 
 def test_shard_ineligible_on_single_device(rng_np, key):
     """Runs in ANY device configuration: eligibility tracks the mesh rule
-    (M | device_count, multi-device), and auto never crashes."""
+    (1:1 when M divides the device count, block placement when the device
+    count divides M), and auto never crashes."""
     xs, y, _, _ = _setting(rng_np)
     orgs = make_orgs(xs, Linear())
     d = jax.device_count()
-    assert shard_eligible(orgs) == (d > 1 and d % M == 0)
+    assert shard_eligible(orgs) == (d > 1 and (d % M == 0 or M % d == 0))
     res = gal.fit(key, orgs, y, get_loss("mse"), GALConfig(rounds=1))
     assert res.engine == ("shard" if shard_eligible(orgs) else "scan")

@@ -22,14 +22,14 @@ _SCRIPT = textwrap.dedent("""
 
     from repro.configs import get_arch
     from repro.launch import sharding as shd
-    from repro.launch.mesh import make_test_mesh
+    from repro.launch.mesh import make_device_mesh
     from repro.launch.specs import abstract_params, train_batch_specs
     from repro.configs.base import SHAPES, InputShape
     from repro.models import pspec as act_hints
     from repro.models import transformer as tfm
     from repro.train.steps import make_train_step
 
-    mesh = make_test_mesh((2, 4), ("data", "model"))
+    mesh = make_device_mesh((2, 4), ("data", "model"))
     act_hints.set_mesh(mesh)
     cfg = get_arch("llama3-8b", smoke=True)
 
