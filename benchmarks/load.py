@@ -1,0 +1,182 @@
+"""Serving load benchmark: the multi-tenant batched GAL service vs the
+one-request-at-a-time baseline, on the SAME saved artifacts.
+
+Fits ``--tenants`` small MLP collaborations (distinct seeds), saves each
+as a ``gal-artifact/v1`` directory, registers the directories with an
+``ArtifactRegistry`` (so the measured path is the full load-from-disk
+serving path), warms every tenant's bucket cache, then measures:
+
+  * ``run_serial`` — every request is its own blocked 1-row launch
+    through the tenant's jitted bucket cache (the unbatched baseline);
+  * ``run_load``  — ``--clients`` concurrent closed-loop clients, each
+    keeping ``--depth`` requests in flight, served through per-tenant
+    micro-batching (docs/serving.md).
+
+The MLP workload is deliberately weight-heavy: a 1-row launch and a
+16-row launch read the same stacked round params, so packing concurrent
+requests amortizes the launch almost for free — the regime in which a
+production Prediction Stage benefits from batching. Results land as
+``gal-bench/v1`` rows ``serve_throughput`` / ``serve_p99`` in
+``--json-out`` (the BENCH_PR9.json CI artifact).
+
+Run: PYTHONPATH=src python -m benchmarks.load --json-out BENCH_PR9.json
+"""
+from __future__ import annotations
+
+from repro.utils.force_devices import apply_force_devices
+apply_force_devices()
+
+import argparse
+import tempfile
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def fit_tenant_artifact(seed: int, out_dir: Path, *, rounds: int,
+                        orgs: int, hidden: int, epochs: int,
+                        d_total: int = 64, n: int = 256) -> Path:
+    """Fit one tenant's collaboration (per-seed data + init) and save it
+    as a versioned artifact directory; returns the directory."""
+    from repro.checkpoint import save_artifact
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import MLP
+
+    rng = np.random.default_rng(seed)
+    key = jax.random.PRNGKey(seed)
+    ds = make_regression(rng, n=n, d=d_total)
+    train, _ = train_test_split(ds, rng)
+    xs = split_features(train.x, orgs)
+    res = gal.fit(key, make_orgs(xs, MLP(hidden=(hidden, hidden),
+                                         epochs=epochs)),
+                  train.y, get_loss("mse"),
+                  GALConfig(rounds=rounds, engine="scan"))
+    path = out_dir / f"tenant{seed}"
+    save_artifact(res, path)
+    return path
+
+
+def build_requests(registry, tenants, total: int, clients: int,
+                   rows_per_tenant: int = 64):
+    """Single-row requests synthesized from each tenant's fitted
+    geometry. Waves of ``clients`` consecutive requests share a tenant,
+    so under the i %% clients fan-out every client hits the same tenant
+    at the same time — the batcher sees full per-tenant complements."""
+    tenant_rows = {}
+    for ti, tenant in enumerate(tenants):
+        widths = registry.get(tenant).widths
+        rng = np.random.default_rng(1000 + ti)
+        tenant_rows[tenant] = [
+            rng.normal(size=(rows_per_tenant, w)).astype(np.float32)
+            for w in widths]
+    requests = []
+    for i in range(total):
+        tenant = tenants[(i // max(clients, 1)) % len(tenants)]
+        row = i % rows_per_tenant
+        requests.append(
+            (tenant, [x[row:row + 1] for x in tenant_rows[tenant]]))
+    return requests
+
+
+def bench_serve(args) -> list:
+    """Run the load benchmark; returns the gal-bench/v1 rows."""
+    from repro.serve import (ArtifactRegistry, GALService, run_load,
+                             run_serial)
+
+    registry = ArtifactRegistry(max_batch=args.max_batch)
+    tenants = []
+    with tempfile.TemporaryDirectory(prefix="gal-serve-bench-") as tmp:
+        for seed in range(args.tenants):
+            path = fit_tenant_artifact(
+                seed, Path(tmp), rounds=args.rounds, orgs=args.orgs,
+                hidden=args.hidden, epochs=args.epochs)
+            tenant = f"tenant{seed}"
+            registry.register(tenant, path)
+            tenants.append(tenant)
+        print(f"# {len(tenants)} tenant artifacts fit + saved + registered")
+
+        requests = build_requests(registry, tenants, args.requests,
+                                  args.clients)
+        service = GALService(registry,
+                             deadline_s=args.deadline_ms / 1e3,
+                             flush_rows=args.flush_rows)
+        try:
+            buckets = sum(service.warmup(t) for t in tenants)
+            print(f"# warmed {buckets} bucket compilations")
+            serial = run_serial(
+                registry, requests[:max(args.clients, args.requests // 4)])
+            load = run_load(service, requests, clients=args.clients,
+                            depth=args.depth)
+        finally:
+            service.close()
+        stats = service.stats()
+
+    rpb = [t["rows_per_batch"] for t in stats["tenants"].values()]
+    speedup = load["requests_per_sec"] / serial["requests_per_sec"]
+    print(f"serve_throughput,{load['requests_per_sec']:.0f} req/s,"
+          f"serial {serial['requests_per_sec']:.0f} req/s,"
+          f"speedup {speedup:.2f}x,rows/batch {np.mean(rpb):.1f}")
+    print(f"serve_p99,p50 {load['p50_ms']:.2f} ms,"
+          f"p99 {load['p99_ms']:.2f} ms")
+    common = {
+        "tenants": args.tenants, "clients": args.clients,
+        "depth": args.depth, "requests": load["requests"],
+        "max_batch": args.max_batch, "flush_rows": args.flush_rows,
+        "deadline_ms": args.deadline_ms,
+        "model": f"mlp{args.hidden}", "rounds": args.rounds,
+        "orgs": args.orgs,
+    }
+    return [
+        {"scenario": "serve_throughput", **common,
+         "seconds": load["seconds"],
+         "requests_per_sec": load["requests_per_sec"],
+         "serial_requests_per_sec": serial["requests_per_sec"],
+         "speedup_vs_serial": speedup,
+         "rows_per_batch": float(np.mean(rpb))},
+        {"scenario": "serve_p99", **common,
+         "seconds": load["seconds"],
+         "p50_ms": load["p50_ms"], "p99_ms": load["p99_ms"],
+         "mean_ms": load["mean_ms"],
+         "serial_p50_ms": serial["p50_ms"],
+         "serial_p99_ms": serial["p99_ms"]},
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--requests", type=int, default=1600)
+    ap.add_argument("--depth", type=int, default=4,
+                    help="requests each client keeps in flight")
+    ap.add_argument("--max-batch", type=int, default=64)
+    ap.add_argument("--flush-rows", type=int, default=16)
+    ap.add_argument("--deadline-ms", type=float, default=10.0)
+    ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--orgs", type=int, default=4)
+    ap.add_argument("--hidden", type=int, default=256,
+                    help="per-org MLP hidden width (weight traffic per "
+                         "launch — what batching amortizes)")
+    ap.add_argument("--epochs", type=int, default=5,
+                    help="local fit epochs (serving bench: quality is "
+                         "irrelevant, keep the fit cheap)")
+    ap.add_argument("--json-out", default=None, metavar="PATH",
+                    help="write the gal-bench/v1 artifact here")
+    args = ap.parse_args()
+    if args.tenants < 1:
+        ap.error("--tenants must be >= 1")
+
+    rows = bench_serve(args)
+    if args.json_out:
+        from benchmarks.run import write_bench_json
+        write_bench_json(args.json_out, rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpoint import (ARTIFACT_SCHEMA, GALCheckpoint,
-                                         load_artifact, load_pytree,
-                                         save_artifact, save_pytree)
+                                         artifact_info, load_artifact,
+                                         load_pytree, save_artifact,
+                                         save_pytree)

@@ -390,6 +390,37 @@ def save_artifact(result: Any, path: str | Path) -> Path:
     return path
 
 
+def artifact_info(path: str | Path) -> Dict[str, Any]:
+    """Cheap artifact peek: read and validate ``manifest.json`` WITHOUT
+    touching ``arrays.npz``. This is what a serving registry uses to
+    validate a tenant registration and describe its inventory — a full
+    ``load_artifact`` materializes every round's stacked params, which is
+    exactly the cost lazy loading defers."""
+    path = Path(path)
+    man_path = path / ARTIFACT_MANIFEST
+    if not man_path.exists():
+        raise ValueError(f"{path} is not a GAL artifact directory "
+                         f"(missing {ARTIFACT_MANIFEST})")
+    manifest = json.loads(man_path.read_text())
+    schema = manifest.get("schema")
+    if schema != ARTIFACT_SCHEMA:
+        raise ValueError(
+            f"unsupported artifact schema {schema!r}: this build reads "
+            f"{ARTIFACT_SCHEMA!r} (re-fit and re-save, or load with a "
+            f"matching build)")
+    return {
+        "schema": schema,
+        "engine": manifest.get("engine"),
+        "rounds": int(manifest.get("rounds", 0)),
+        "n_orgs": int(manifest.get("n_orgs", 0)),
+        "n_groups": len(manifest.get("plan", {}).get("groups", [])),
+        "t_next": manifest.get("t_next"),
+        "eval_names": list(manifest.get("eval_names", [])),
+        "group_dims": manifest.get("group_dims"),
+        "group_pads": manifest.get("group_pads"),
+    }
+
+
 def load_artifact(path: str | Path,
                   losses: Optional[Dict[str, Callable]] = None,
                   models: Optional[Dict[str, Any]] = None) -> Any:

@@ -36,6 +36,14 @@ Examples (CPU container):
       --rounds 8 --orgs 4 --save /tmp/gal-artifact          # fit once
   PYTHONPATH=src python -m repro.launch.serve --gal-ensemble \
       --orgs 4 --load /tmp/gal-artifact                     # serve forever
+  PYTHONPATH=src python -m repro.launch.serve --service \
+      --tenants 2 --clients 8 --requests 256               # the service
+
+``--service`` runs the multi-tenant inference service (``repro.serve``,
+docs/serving.md): an artifact registry of ``--tenants`` collaborations
+served through per-tenant bucketed micro-batching, driven by
+``--clients`` concurrent closed-loop clients, reporting batched
+throughput/latency against the one-request-at-a-time baseline.
 
 NOTE: the ``REPRO_FORCE_DEVICES`` shim below must run before the first jax
 operation in the process (see repro/utils/force_devices.py), so it sits
@@ -49,6 +57,40 @@ import time
 
 import jax
 import jax.numpy as jnp
+
+
+def measure_request_path(fn, steps: int):
+    """Time a jitted request path two ways (all clocks monotonic):
+
+    * **blocked latency** — block on every result before issuing the
+      next request: the time ONE caller waits for its answer.
+    * **pipelined throughput** — dispatch all ``steps`` requests and
+      block once at the end: what the async dispatch pipeline sustains.
+
+    The old serve loop dispatched asynchronously and blocked only on the
+    final result but printed the number as "ms/req" — that is the
+    throughput figure, NOT the latency a caller sees; this helper
+    reports both, under their real names. Returns ``(latency_s,
+    throughput_s)`` per request, or ``(None, None)`` when ``steps == 0``
+    (compile-only runs measure nothing).
+    """
+    if steps <= 0:
+        return None, None
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        jax.block_until_ready(fn())
+    lat = (time.perf_counter() - t0) / steps
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(steps):
+        out = fn()
+    jax.block_until_ready(out)
+    thr = (time.perf_counter() - t0) / steps
+    return lat, thr
+
+
+def _fmt_ms(seconds) -> str:
+    return "n/a (steps=0)" if seconds is None else f"{seconds * 1e3:.2f} ms"
 
 
 def gal_ensemble_serve(args) -> None:
@@ -76,9 +118,9 @@ def gal_ensemble_serve(args) -> None:
     req_widths = None
     if args.load:
         from repro.checkpoint import load_artifact
-        t0 = time.time()
+        t0 = time.perf_counter()
         res = load_artifact(args.load)
-        dt_load = time.time() - t0
+        dt_load = time.perf_counter() - t0
         if res.plan is not None and res.plan.n_orgs != args.orgs:
             # the artifact knows its own org count — no need to re-type it
             print(f"gal-ensemble: the artifact was fit on "
@@ -91,11 +133,9 @@ def gal_ensemble_serve(args) -> None:
                 "(this one was fit on higher-rank slices); load it with "
                 "repro.checkpoint.load_artifact and call predict directly")
         # request slices must reproduce the artifact's per-org widths, in
-        # org order — the geometry lives in the plan + group_dims
-        req_widths = [0] * res.plan.n_orgs
-        for gi, g in enumerate(res.plan.groups):
-            for j, i in enumerate(g.indices):
-                req_widths[i] = int(res.group_dims[gi][j])
+        # org order — the registry recovers them from the plan geometry
+        from repro.serve import request_widths
+        req_widths = request_widths(res)
         print(f"gal-ensemble WARM start: loaded {args.load} in "
               f"{dt_load * 1e3:.0f} ms (engine={res.engine} "
               f"rounds={res.rounds}, no refit — the artifact outlives "
@@ -125,24 +165,24 @@ def gal_ensemble_serve(args) -> None:
                 engine = "grouped"  # single-group engines cannot mix models
         else:
             models = Linear()
-        t0 = time.time()
+        t0 = time.perf_counter()
         orgs = make_orgs(xs, models, dms=dms)
         cfg = GALConfig(rounds=args.rounds, engine=engine)
         res = gal.fit(key, orgs, train.y, get_loss("mse"), cfg)
-        dt_fit = time.time() - t0
+        dt_fit = time.perf_counter() - t0
         print(f"gal-ensemble COLD start: fit {args.rounds} rounds in "
               f"{dt_fit:.2f} s (engine={res.engine})")
         if args.contributions:
             from repro.core.contrib import leave_one_out, truncated_shapley
             cut = args.rounds // 2
-            t0 = time.time()
+            t0 = time.perf_counter()
             if args.contributions == "shapley":
                 rep = truncated_shapley(key, orgs, train.y, get_loss("mse"),
                                         cfg, t0=cut, full=res)
             else:
                 rep = leave_one_out(key, orgs, train.y, get_loss("mse"),
                                     cfg, t0=cut, full=res)
-            dt_c = time.time() - t0
+            dt_c = time.perf_counter() - t0
             print(f"gal-ensemble contributivity ({rep['method']}, "
                   f"value={rep['value']} over rounds {cut}..{args.rounds}, "
                   f"{rep['refits']} counterfactual refits resumed from the "
@@ -154,10 +194,10 @@ def gal_ensemble_serve(args) -> None:
                 print(f"  org {oid}: {s:+12.4f}  {bar}")
         if args.save:
             from repro.checkpoint import save_artifact
-            t0 = time.time()
+            t0 = time.perf_counter()
             save_artifact(res, args.save)
             print(f"gal-ensemble artifact saved to {args.save} in "
-                  f"{(time.time() - t0) * 1e3:.0f} ms — serve it with "
+                  f"{(time.perf_counter() - t0) * 1e3:.0f} ms — serve it with "
                   f"--load {args.save} (no refit) or extend it with "
                   f"gal.fit(..., resume_from={args.save!r})")
     if "model_memories" in res.history:
@@ -187,20 +227,20 @@ def gal_ensemble_serve(args) -> None:
     xs_req = [jnp.tile(x, (max(1, args.batch // x.shape[0]) + 1, 1)
                        )[:args.batch] for x in slices]
     # ONE jit compilation, cached across every subsequent request — for a
-    # loaded artifact this is the entire warm-up cost of the deployment
+    # loaded artifact this is the entire warm-up cost of the deployment.
+    # The compile call also BINDS the output, so --steps 0 still has a
+    # result to verify against (the old loop left `out` unbound there).
     serve_fast = jax.jit(lambda xq: res.predict(xq))
-    jax.block_until_ready(serve_fast(xs_req))            # compile
-    t0 = time.time()
-    for _ in range(args.steps):
-        out = serve_fast(xs_req)
-    jax.block_until_ready(out)
-    dt_fast = (time.time() - t0) / args.steps
+    out = jax.block_until_ready(serve_fast(xs_req))       # compile
+    lat_fast, thr_fast = measure_request_path(
+        lambda: serve_fast(xs_req), args.steps)
 
     if args.load:
         # a loaded artifact has no live Organizations: the legacy
         # per-(round, org) loop does not apply — report the served path
         print(f"gal-ensemble orgs={args.orgs} rounds={res.rounds} "
-              f"batch={args.batch}: stacked={dt_fast * 1e3:.2f} ms/req "
+              f"batch={args.batch}: stacked latency={_fmt_ms(lat_fast)}/req "
+              f"pipelined={_fmt_ms(thr_fast)}/req "
               f"(warm-loaded artifact, jitted predict cached across "
               f"requests)")
         return
@@ -213,19 +253,102 @@ def gal_ensemble_serve(args) -> None:
     stacks, _, _ = stack_groups(xs_req, index_groups, pad_tos=res.group_pads)
     xs_padded = unstack_groups(stacks, index_groups)
 
-    jax.block_until_ready(res.predict_legacy(xs_padded))
-    t0 = time.time()
-    for _ in range(args.steps):
-        out_legacy = res.predict_legacy(xs_padded)
-    jax.block_until_ready(out_legacy)
-    dt_legacy = (time.time() - t0) / args.steps
+    out_legacy = jax.block_until_ready(res.predict_legacy(xs_padded))
+    lat_legacy, thr_legacy = measure_request_path(
+        lambda: res.predict_legacy(xs_padded), args.steps)
 
     drift = float(jnp.max(jnp.abs(out - out_legacy)))
+    speedup = ("n/a" if lat_fast is None
+               else f"{lat_legacy / max(lat_fast, 1e-9):.1f}x")
     print(f"gal-ensemble orgs={args.orgs} rounds={args.rounds} "
-          f"batch={args.batch}: stacked={dt_fast * 1e3:.2f} ms/req "
-          f"legacy={dt_legacy * 1e3:.2f} ms/req "
-          f"speedup={dt_legacy / max(dt_fast, 1e-9):.1f}x "
-          f"max_drift={drift:.2e}")
+          f"batch={args.batch}: "
+          f"stacked latency={_fmt_ms(lat_fast)}/req "
+          f"pipelined={_fmt_ms(thr_fast)}/req "
+          f"legacy latency={_fmt_ms(lat_legacy)}/req "
+          f"speedup={speedup} max_drift={drift:.2e}")
+
+
+def service_serve(args) -> None:
+    """``--service``: the multi-tenant inference service (docs/serving.md)
+    under a concurrent closed-loop load harness. Registers ``--tenants``
+    collaborations (fit fresh per-tenant, or ``--load DIR`` registered
+    once per tenant), warms each tenant's bucket cache, then prints the
+    batched service's throughput/latency next to the one-request-at-a-
+    time baseline on the same artifacts."""
+    import numpy as np
+    from repro.core import gal
+    from repro.core.gal import GALConfig
+    from repro.core.losses import get_loss
+    from repro.core.organizations import make_orgs
+    from repro.data.partition import split_features
+    from repro.data.synthetic import make_regression, train_test_split
+    from repro.models.zoo import Linear
+    from repro.serve import (ArtifactRegistry, GALService, run_load,
+                             run_serial)
+
+    registry = ArtifactRegistry(max_batch=args.max_batch)
+    tenants = [f"tenant{i}" for i in range(args.tenants)]
+    t0 = time.perf_counter()
+    for ti, tenant in enumerate(tenants):
+        if args.load:
+            registry.register(tenant, args.load)
+            continue
+        rng = np.random.default_rng(ti)
+        key = jax.random.PRNGKey(ti)
+        ds = make_regression(rng, n=256, d=4 * args.orgs)
+        train, _ = train_test_split(ds, rng)
+        xs = split_features(train.x, args.orgs)
+        res = gal.fit(key, make_orgs(xs, Linear()), train.y,
+                      get_loss("mse"),
+                      GALConfig(rounds=args.rounds, engine="scan"))
+        registry.register(tenant, res)
+    src = f"loaded {args.load}" if args.load else "fit fresh"
+    print(f"gal-service: {len(tenants)} tenants registered ({src}) in "
+          f"{time.perf_counter() - t0:.2f} s")
+
+    # synthesize single-row requests from each tenant's fitted geometry;
+    # waves of `clients` consecutive requests share a tenant so the
+    # batcher sees full per-tenant complements
+    tenant_rows = {}
+    for ti, tenant in enumerate(tenants):
+        widths = registry.get(tenant).widths
+        if any(w is None for w in widths):
+            raise SystemExit("--service serves tabular artifacts only")
+        rng = np.random.default_rng(100 + ti)
+        tenant_rows[tenant] = [
+            rng.normal(size=(64, w)).astype(np.float32) for w in widths]
+    requests = []
+    for i in range(args.requests):
+        tenant = tenants[(i // max(args.clients, 1)) % len(tenants)]
+        row = i % 64
+        requests.append(
+            (tenant, [x[row:row + 1] for x in tenant_rows[tenant]]))
+
+    svc = GALService(registry, deadline_s=args.deadline_ms / 1e3,
+                     flush_rows=args.flush_rows)
+    t0 = time.perf_counter()
+    buckets = sum(svc.warmup(t) for t in tenants)
+    print(f"gal-service: warmed {buckets} bucket compilations "
+          f"(max_batch={args.max_batch}) in "
+          f"{time.perf_counter() - t0:.2f} s — no live request pays a "
+          f"compile")
+    try:
+        serial = run_serial(registry, requests[:max(args.clients,
+                                                    args.requests // 4)])
+        load = run_load(svc, requests, clients=args.clients,
+                        depth=args.depth)
+    finally:
+        svc.close()
+    print(f"gal-service serial (1 client, blocked): "
+          f"{serial['requests_per_sec']:.0f} req/s "
+          f"p50={serial['p50_ms']:.2f} ms")
+    print(f"gal-service batched ({args.clients} clients x depth "
+          f"{args.depth}): {load['requests_per_sec']:.0f} req/s "
+          f"p50={load['p50_ms']:.2f} ms p99={load['p99_ms']:.2f} ms "
+          f"speedup={load['requests_per_sec'] / serial['requests_per_sec']:.1f}x")
+    for tenant, st in sorted(svc.stats()["tenants"].items()):
+        print(f"  {tenant}: {st['requests']} requests in {st['batches']} "
+              f"launches ({st['rows_per_batch']:.1f} rows/launch)")
 
 
 def main() -> None:
@@ -270,6 +393,27 @@ def main() -> None:
                          "org's contributivity (leave-one-out or truncated "
                          "Shapley) via counterfactual refits resumed from "
                          "the mid-fit carry, and print the per-org table")
+    ap.add_argument("--service", action="store_true",
+                    help="run the multi-tenant inference service "
+                         "(registry + bucketed batching, repro.serve) "
+                         "under a concurrent load harness; combine with "
+                         "--load DIR to serve a saved artifact per tenant")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="--service: registered collaborations")
+    ap.add_argument("--clients", type=int, default=8,
+                    help="--service: concurrent load-generator threads")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="--service: total requests across all clients")
+    ap.add_argument("--depth", type=int, default=4,
+                    help="--service: requests each client keeps in flight")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="--service: largest bucket shape (jit cache holds "
+                         "one compile per power-of-two bucket up to this)")
+    ap.add_argument("--deadline-ms", type=float, default=10.0,
+                    help="--service: max time a pending request waits "
+                         "before its batch is flushed anyway")
+    ap.add_argument("--flush-rows", type=int, default=16,
+                    help="--service: rows that trigger an immediate flush")
     args = ap.parse_args()
 
     if args.load:
@@ -283,6 +427,15 @@ def main() -> None:
                      f"{'/'.join(conflicts)} choose fit-time behavior — "
                      f"drop them (or drop --load to fit)")
 
+    if args.service:
+        for flag, on in (("--save", args.save), ("--hetero", args.hetero),
+                         ("--dms", args.dms),
+                         ("--contributions", args.contributions)):
+            if on:
+                ap.error(f"--service serves fitted artifacts; {flag} "
+                         f"chooses fit-time behavior — drop it")
+        service_serve(args)
+        return
     if args.gal_ensemble:
         gal_ensemble_serve(args)
         return
@@ -319,15 +472,19 @@ def main() -> None:
     serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
     tok = jax.random.randint(key, (args.batch, 1), 0, cfg.vocab)
     with mesh:
+        # the compile call binds `logits`, so --steps 0 (compile-only)
+        # still has a result to check for finiteness
         logits, cache = serve(params, cache, tok)  # compile
-        t0 = time.time()
+        jax.block_until_ready(logits)
+        t0 = time.perf_counter()
         for _ in range(args.steps):
             logits, cache = serve(params, cache, tok)
             tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
         jax.block_until_ready(logits)
-    dt = (time.time() - t0) / args.steps
+    dt = ((time.perf_counter() - t0) / args.steps if args.steps > 0
+          else None)
     print(f"arch={cfg.arch} mesh={dict(mesh.shape)} batch={args.batch} "
-          f"cache={args.cache_len}: {dt * 1e3:.2f} ms/token "
+          f"cache={args.cache_len}: {_fmt_ms(dt)}/token "
           f"finite={bool(jnp.all(jnp.isfinite(logits)))}")
 
 

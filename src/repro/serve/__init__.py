@@ -1,0 +1,12 @@
+"""The GAL inference service (docs/serving.md): multi-tenant artifact
+registry + bucketed request batching over the Prediction Stage."""
+from repro.serve.batcher import (BucketedPredict, MicroBatcher, bucket_for,
+                                 bucket_sizes, pad_rows)
+from repro.serve.registry import ArtifactRegistry, TenantEntry, request_widths
+from repro.serve.service import GALService, run_load, run_serial
+
+__all__ = [
+    "ArtifactRegistry", "BucketedPredict", "GALService", "MicroBatcher",
+    "TenantEntry", "bucket_for", "bucket_sizes", "pad_rows",
+    "request_widths", "run_load", "run_serial",
+]

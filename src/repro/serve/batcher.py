@@ -1,0 +1,291 @@
+"""Request batching for the GAL Prediction Stage serving path.
+
+Two layers:
+
+* ``BucketedPredict`` — wraps one tenant's ``GALResult.predict`` into a
+  jitted callable with **pad-to-bucket** batch shapes: a request of ``n``
+  rows is zero-padded up to the smallest bucket (powers of two up to
+  ``max_batch``) before the device launch and sliced back after. The jit
+  cache therefore holds AT MOST ``len(bucket_sizes(max_batch))``
+  compilations per tenant, no matter what request sizes arrive — the
+  property that keeps a long-lived multi-tenant server from compiling
+  itself to death. Padding rows are zeros and the prediction stage is
+  row-independent (per-row model applies contracted with per-round
+  weights), so the un-padded rows are **bitwise identical** to an
+  unbatched ``predict`` call (pinned in ``tests/test_serve_batching.py``).
+  On backends with buffer donation (GPU/TPU) the padded request buffers
+  are donated to the launch — they are always freshly allocated by the
+  packer, so the hot path never copies them.
+
+* ``MicroBatcher`` — packs CONCURRENT predict calls into one device
+  launch. ``submit(xs)`` enqueues a request and returns a
+  ``concurrent.futures.Future``; a flush concatenates every pending
+  request's rows, chunks them to ``max_batch``, launches each chunk
+  through the tenant's ``BucketedPredict``, and resolves each future with
+  its own rows as a zero-copy numpy view of the synced batch output
+  (results are device-complete before delivery, so a resolved future IS
+  a finished request). The flush policy is
+  deadline-based: a flush fires as soon as ``flush_rows`` rows are
+  pending, or when the oldest pending request has waited ``deadline_s``
+  — whichever comes first. With the default ``flush_rows=1`` the
+  background flusher runs *continuous batching*: it launches whatever is
+  pending the moment the previous launch returns, so under concurrent
+  load each launch naturally carries every request that arrived during
+  the previous one. The clock is injectable (``clock=``) and the
+  background thread optional (``auto_flush=False`` + ``poll()``/
+  ``flush()``), so the deadline logic is testable without sleeping.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+__all__ = ["bucket_sizes", "bucket_for", "pad_rows", "BucketedPredict",
+           "MicroBatcher"]
+
+
+def bucket_sizes(max_batch: int) -> tuple:
+    """The served batch shapes: powers of two up to ``max_batch``, plus
+    ``max_batch`` itself when it is not a power of two. Every request is
+    padded up to the smallest bucket that holds it, so this tuple is the
+    complete set of batch dimensions the jit cache will ever see."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes: List[int] = []
+    b = 1
+    while b < max_batch:
+        sizes.append(b)
+        b *= 2
+    sizes.append(max_batch)
+    return tuple(sizes)
+
+
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket holding ``n`` rows."""
+    if n < 1:
+        raise ValueError(f"a request needs at least one row, got {n}")
+    for b in buckets:
+        if n <= b:
+            return int(b)
+    raise ValueError(f"{n} rows exceed the largest bucket ({buckets[-1]}); "
+                     f"chunk the request (MicroBatcher does)")
+
+
+def pad_rows(xs: Sequence[Any], n_to: int) -> List[np.ndarray]:
+    """Zero-pad each per-org slice from its row count up to ``n_to`` rows
+    (host-side: the padded buffers are freshly allocated, which is what
+    makes them safely donatable to the launch)."""
+    out = []
+    for x in xs:
+        arr = np.asarray(x)
+        n = arr.shape[0]
+        if n == n_to:
+            out.append(arr)
+            continue
+        pad = np.zeros((n_to - n,) + arr.shape[1:], arr.dtype)
+        out.append(np.concatenate([arr, pad], axis=0))
+    return out
+
+
+class BucketedPredict:
+    """One tenant's jitted, bucket-padded prediction path.
+
+    ``donate=None`` enables input-buffer donation only on backends that
+    implement it (GPU/TPU); on CPU donation is a no-op that would warn on
+    every compile, so it stays off there unless forced."""
+
+    def __init__(self, predict_fn: Callable, max_batch: int = 64,
+                 donate: Optional[bool] = None):
+        self.max_batch = int(max_batch)
+        self.buckets = bucket_sizes(self.max_batch)
+        if donate is None:
+            donate = jax.default_backend() in ("gpu", "tpu")
+        self.donate = bool(donate)
+        self._jit = jax.jit(lambda xq: predict_fn(xq),
+                            donate_argnums=(0,) if self.donate else ())
+        self.launches = 0
+        self.rows_launched = 0
+        self.rows_padded = 0
+
+    def __call__(self, xs: Sequence[Any]):
+        """Serve up to ``max_batch`` rows: pad to the bucket, one launch,
+        slice the real rows back out."""
+        n = int(np.asarray(xs[0]).shape[0])
+        b = bucket_for(n, self.buckets)
+        out = self._jit(pad_rows(xs, b))
+        self.launches += 1
+        self.rows_launched += n
+        self.rows_padded += b - n
+        return out[:n]
+
+    def compile_buckets(self, widths: Sequence[Optional[int]],
+                        dtype=np.float32) -> int:
+        """Warm the whole jit cache up front: launch one zero request per
+        bucket size. Returns the number of buckets compiled. Only
+        possible for tabular (2-D) request geometry — ``widths`` is the
+        per-org slice width list."""
+        if any(w is None for w in widths):
+            raise ValueError("compile_buckets needs per-org slice widths "
+                             "(tabular requests); serve a real request to "
+                             "warm higher-rank geometries")
+        for b in self.buckets:
+            zeros = [np.zeros((b, int(w)), dtype) for w in widths]
+            jax.block_until_ready(self._jit(zeros))
+        return len(self.buckets)
+
+
+class _Pending:
+    __slots__ = ("xs", "rows", "future", "t_submit")
+
+    def __init__(self, xs, rows, future, t_submit):
+        self.xs, self.rows = xs, rows
+        self.future, self.t_submit = future, t_submit
+
+
+class MicroBatcher:
+    """Packs concurrent ``submit`` calls into bucketed device launches.
+
+    ``predict_resolver`` is called at flush time and must return the
+    tenant's live ``BucketedPredict`` — resolving late (rather than
+    capturing the callable at construction) is what lets a registry evict
+    and lazily reload the tenant underneath a long-lived batcher.
+    """
+
+    def __init__(self, predict_resolver: Callable[[], BucketedPredict],
+                 deadline_s: float = 0.002, flush_rows: int = 1,
+                 clock: Callable[[], float] = time.monotonic,
+                 auto_flush: bool = True):
+        if flush_rows < 1:
+            raise ValueError(f"flush_rows must be >= 1, got {flush_rows}")
+        self._resolve = predict_resolver
+        self.deadline_s = float(deadline_s)
+        self.flush_rows = int(flush_rows)
+        self.clock = clock
+        self._cond = threading.Condition()
+        self._pending: List[_Pending] = []
+        self._pending_rows = 0
+        self._closed = False
+        # stats
+        self.requests = 0
+        self.rows = 0
+        self.batches = 0
+        self.max_batch_rows = 0
+        self._thread: Optional[threading.Thread] = None
+        if auto_flush:
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="gal-serve-flusher")
+            self._thread.start()
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, xs: Sequence[Any]) -> Future:
+        """Enqueue one request (a per-org list of row slices); the returned
+        future resolves to the ``(rows, K)`` prediction once its batch has
+        been launched AND the result is device-complete."""
+        rows = int(np.asarray(xs[0]).shape[0])
+        if rows < 1:
+            raise ValueError("a request needs at least one row")
+        fut: Future = Future()
+        with self._cond:
+            if self._closed:
+                raise RuntimeError("batcher is closed")
+            self._pending.append(_Pending(list(xs), rows, fut, self.clock()))
+            self._pending_rows += rows
+            # only the flusher thread ever waits on _cond; waking exactly
+            # one waiter avoids a thundering herd on single-core hosts
+            self._cond.notify()
+        return fut
+
+    # -- flushing -----------------------------------------------------------
+
+    def _due(self, now: float) -> bool:
+        if not self._pending:
+            return False
+        return (self._pending_rows >= self.flush_rows
+                or now - self._pending[0].t_submit >= self.deadline_s)
+
+    def poll(self) -> int:
+        """Flush IF the deadline policy says a flush is due (manual
+        pumping — what the fake-clock tests and ``auto_flush=False``
+        deployments call). Returns the number of requests flushed."""
+        with self._cond:
+            if not self._due(self.clock()):
+                return 0
+        return self.flush()
+
+    def flush(self) -> int:
+        """Launch everything pending (chunked to ``max_batch`` rows per
+        launch) and resolve the futures. Returns requests flushed."""
+        with self._cond:
+            pending, self._pending = self._pending, []
+            self._pending_rows = 0
+        if not pending:
+            return 0
+        try:
+            predict = self._resolve()
+            xs_cat = [np.concatenate([np.asarray(p.xs[m]) for p in pending],
+                                     axis=0)
+                      for m in range(len(pending[0].xs))]
+            total = sum(p.rows for p in pending)
+            outs = []
+            for start in range(0, total, predict.max_batch):
+                chunk = [x[start:start + predict.max_batch] for x in xs_cat]
+                outs.append(predict(chunk))
+            # one device->host sync for the whole batch; per-request
+            # results are then zero-copy numpy views (slicing the jax
+            # array instead would dispatch one device op PER REQUEST)
+            out = np.concatenate([np.asarray(o) for o in outs], axis=0)
+            ofs = 0
+            for p in pending:
+                p.future.set_result(out[ofs:ofs + p.rows])
+                ofs += p.rows
+            self.batches += 1
+            self.requests += len(pending)
+            self.rows += total
+            self.max_batch_rows = max(self.max_batch_rows, total)
+        except Exception as e:                      # noqa: BLE001
+            for p in pending:
+                if not p.future.done():
+                    p.future.set_exception(e)
+        return len(pending)
+
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._closed and not self._pending:
+                    self._cond.wait(timeout=0.1)
+                if self._closed:
+                    return
+                # accumulation window: wait (up to the oldest request's
+                # deadline) for flush_rows rows before launching
+                now = self.clock()
+                while (not self._closed and self._pending
+                       and not self._due(now)):
+                    remain = self.deadline_s - (now - self._pending[0].t_submit)
+                    self._cond.wait(timeout=max(remain, 1e-4))
+                    now = self.clock()
+                if self._closed:
+                    return
+            self.flush()
+
+    def close(self) -> None:
+        """Stop the flusher and drain anything still pending."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+        self.flush()
+
+    def stats(self) -> dict:
+        return {
+            "requests": self.requests, "rows": self.rows,
+            "batches": self.batches,
+            "max_batch_rows": self.max_batch_rows,
+            "rows_per_batch": self.rows / max(self.batches, 1),
+        }

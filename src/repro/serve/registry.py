@@ -1,0 +1,223 @@
+"""Multi-tenant artifact registry: many fitted collaborations, one server.
+
+One ``gal-artifact/v1`` directory (or in-memory compiled ``GALResult``)
+per **tenant** — one fitted collaboration per customer. Registration is
+cheap (a manifest peek via ``repro.checkpoint.artifact_info``, no array
+reads); the arrays load **lazily** on the tenant's first request, and a
+bounded registry (``max_loaded=``) evicts the least-recently-used tenant
+— dropping its arrays AND its jit cache — while keeping the registration,
+so the next request transparently reloads. Each loaded tenant owns ONE
+``BucketedPredict`` (``serve.batcher``): the per-tenant jit cache that
+every request through the service reuses, bounded at one compilation per
+bucket size.
+
+The registry refuses results it cannot serve deterministically: python-
+engine results (round params live in Organization objects, not the
+artifact form) and plans with noisy groups (the prediction-stage noise is
+drawn at the PADDED batch shape, so bucket padding would change the
+draws — serve noisy ensembles unbatched).
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.serve.batcher import BucketedPredict
+
+__all__ = ["ArtifactRegistry", "TenantEntry", "request_widths"]
+
+
+def request_widths(result: Any) -> List[Optional[int]]:
+    """Per-org request slice widths, in org order, recovered from the
+    plan + per-group stacking geometry (the same recipe the serve CLI
+    uses for ``--load``). Higher-rank slices (images etc.) have no single
+    width and come back as None — batching still works (rows are rows),
+    only the width validation is skipped."""
+    if result.plan is None or result.group_dims is None:
+        raise ValueError(
+            "only compiled-engine results serve through the registry: this "
+            f"result ran engine={result.engine!r} with no execution plan "
+            "attached — refit with engine='auto' or load an artifact")
+    widths: List[Optional[int]] = [None] * result.plan.n_orgs
+    for gi, g in enumerate(result.plan.groups):
+        if result.group_pads[gi] is None:
+            continue                      # higher-rank geometry: no width
+        for j, i in enumerate(g.indices):
+            widths[i] = int(result.group_dims[gi][j])
+    return widths
+
+
+@dataclass
+class TenantEntry:
+    """One loaded tenant: the result, its request geometry, and its
+    jitted bucket cache."""
+    tenant: str
+    result: Any
+    widths: List[Optional[int]]
+    predict: BucketedPredict
+    loads: int = 1
+
+    def validate_request(self, xs: Sequence[Any]) -> None:
+        """Reject a malformed request BEFORE it reaches a batch (a wrong
+        slice would otherwise fail inside someone else's launch)."""
+        if len(xs) != len(self.widths):
+            raise ValueError(
+                f"tenant {self.tenant!r} serves {len(self.widths)} "
+                f"organizations, request carries {len(xs)} slices")
+        rows = {int(x.shape[0]) for x in xs}
+        if len(rows) != 1:
+            raise ValueError(
+                f"request slices disagree on the row count: {sorted(rows)}")
+        for m, (x, w) in enumerate(zip(xs, self.widths)):
+            if w is not None and int(x.shape[-1]) != w:
+                raise ValueError(
+                    f"tenant {self.tenant!r} org {m} expects "
+                    f"{w}-column slices, request has {int(x.shape[-1])}")
+
+
+@dataclass
+class ArtifactRegistry:
+    """Tenant id -> fitted collaboration, with lazy load + LRU eviction.
+
+    ``max_loaded=None`` keeps every tenant resident; a bound makes this a
+    cache over the artifact directories. ``losses``/``models`` resolve
+    custom (non-registry) identities exactly as ``load_artifact`` does.
+    """
+    max_loaded: Optional[int] = None
+    max_batch: int = 64
+    donate: Optional[bool] = None
+    losses: Optional[Dict[str, Any]] = None
+    models: Optional[Dict[str, Any]] = None
+    _sources: Dict[str, Any] = field(default_factory=dict)
+    _loaded: "OrderedDict[str, TenantEntry]" = field(
+        default_factory=OrderedDict)
+    _load_counts: Dict[str, int] = field(default_factory=dict)
+    _lock: threading.RLock = field(default_factory=threading.RLock)
+    loads: int = 0
+    hits: int = 0
+    evictions: int = 0
+
+    def __post_init__(self):
+        if self.max_loaded is not None and self.max_loaded < 1:
+            raise ValueError(f"max_loaded must be >= 1 or None, got "
+                             f"{self.max_loaded}")
+
+    # -- registration -------------------------------------------------------
+
+    def register(self, tenant: str, source: Any) -> None:
+        """Attach a tenant to an artifact directory (validated by a
+        manifest peek — no arrays read) or an in-memory compiled
+        ``GALResult``. Re-registering replaces the source and evicts any
+        loaded copy of the old one."""
+        if isinstance(source, (str, Path)):
+            from repro.checkpoint import artifact_info
+            info = artifact_info(source)        # raises on a non-artifact
+            if info["n_orgs"] < 1:
+                raise ValueError(f"{source}: artifact fits no organizations")
+            source = Path(source)
+        else:
+            self._check_servable(source)
+        with self._lock:
+            self._sources[tenant] = source
+            self._loaded.pop(tenant, None)
+
+    def _check_servable(self, result: Any) -> List[Optional[int]]:
+        widths = request_widths(result)         # needs a plan
+        if any(g.noise_sigma > 0.0 for g in result.plan.groups):
+            raise ValueError(
+                "cannot serve a noisy-org plan through the bucketed "
+                "batcher: prediction-stage noise is drawn at the padded "
+                "batch shape, so padding would change the draws — serve "
+                "noisy ensembles through result.predict directly")
+        return widths
+
+    def tenants(self) -> List[str]:
+        with self._lock:
+            return sorted(self._sources)
+
+    def __contains__(self, tenant: str) -> bool:
+        with self._lock:
+            return tenant in self._sources
+
+    def info(self, tenant: str) -> Dict[str, Any]:
+        """The tenant's manifest summary WITHOUT loading it (path-backed
+        tenants) or a result summary (in-memory ones)."""
+        with self._lock:
+            src = self._require(tenant)
+        if isinstance(src, Path):
+            from repro.checkpoint import artifact_info
+            return {"tenant": tenant, "loaded": self.is_loaded(tenant),
+                    **artifact_info(src)}
+        return {"tenant": tenant, "loaded": self.is_loaded(tenant),
+                "engine": src.engine, "rounds": src.rounds,
+                "n_orgs": src.plan.n_orgs, "schema": None}
+
+    def _require(self, tenant: str) -> Any:
+        if tenant not in self._sources:
+            raise ValueError(
+                f"unknown tenant {tenant!r}: registered tenants are "
+                f"{sorted(self._sources)}")
+        return self._sources[tenant]
+
+    # -- the serving path ---------------------------------------------------
+
+    def get(self, tenant: str) -> TenantEntry:
+        """The tenant's loaded entry, loading lazily on first touch and
+        refreshing its LRU position. Loading past ``max_loaded`` evicts
+        the least-recently-used tenant (arrays + jit cache)."""
+        with self._lock:
+            entry = self._loaded.get(tenant)
+            if entry is not None:
+                self._loaded.move_to_end(tenant)
+                self.hits += 1
+                return entry
+            src = self._require(tenant)
+            if isinstance(src, Path):
+                from repro.checkpoint import load_artifact
+                result = load_artifact(src, losses=self.losses,
+                                       models=self.models)
+            else:
+                result = src
+            widths = self._check_servable(result)
+            count = self._load_counts.get(tenant, 0) + 1
+            self._load_counts[tenant] = count
+            entry = TenantEntry(
+                tenant=tenant, result=result, widths=widths,
+                predict=BucketedPredict(
+                    (lambda xq, _r=result: _r.predict(xq)),
+                    max_batch=self.max_batch, donate=self.donate),
+                loads=count)
+            self._loaded[tenant] = entry
+            self.loads += 1
+            while (self.max_loaded is not None
+                   and len(self._loaded) > self.max_loaded):
+                evicted, _ = self._loaded.popitem(last=False)
+                self.evictions += 1
+            return entry
+
+    def is_loaded(self, tenant: str) -> bool:
+        with self._lock:
+            return tenant in self._loaded
+
+    def evict(self, tenant: str) -> bool:
+        """Drop a tenant's loaded arrays + jit cache (the registration
+        stays; the next request reloads). Returns whether it was loaded."""
+        with self._lock:
+            dropped = self._loaded.pop(tenant, None)
+            if dropped is not None:
+                self.evictions += 1
+            return dropped is not None
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "tenants": len(self._sources),
+                "loaded": len(self._loaded),
+                "loads": self.loads, "hits": self.hits,
+                "evictions": self.evictions,
+                "launches": {t: e.predict.launches
+                             for t, e in self._loaded.items()},
+            }

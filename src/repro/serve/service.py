@@ -1,0 +1,192 @@
+"""The GAL inference service: registry + per-tenant batching + load driver.
+
+``GALService`` is the composition the ROADMAP's millions-of-users story
+asks for: an ``ArtifactRegistry`` of fitted collaborations (lazy load,
+LRU eviction, per-tenant jit-cache reuse) with ONE ``MicroBatcher`` per
+tenant packing concurrent predict calls into bucketed device launches.
+Per-tenant batching is what keeps tenants **isolated**: a flush only ever
+concatenates rows of a single collaboration, so no request can land in
+another customer's launch (pinned in ``tests/test_serve_batching.py``).
+
+``run_load`` / ``run_serial`` are the measurement half: a thread-pool of
+concurrent clients driving the service (batched) vs the same requests
+issued one-at-a-time against the same artifacts (the unbatched baseline),
+reporting requests/sec and p50/p99 **blocked latency** — the time a
+client waits for its completed answer, not the pipelined dispatch rate.
+``benchmarks/load.py`` turns these numbers into the ``serve_throughput``
+/ ``serve_p99`` rows of the BENCH artifact; ``launch/serve.py --service``
+prints them interactively.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.serve.batcher import MicroBatcher
+from repro.serve.registry import ArtifactRegistry
+
+__all__ = ["GALService", "run_load", "run_serial"]
+
+
+class GALService:
+    """Concurrent multi-tenant Prediction Stage server.
+
+    ``submit(tenant, xs)`` validates the request against the tenant's
+    fitted geometry and enqueues it on that tenant's batcher (created
+    lazily, flusher thread per tenant unless ``auto_flush=False``);
+    ``predict`` is the blocking convenience. ``clock``/``auto_flush``
+    exist so the flush policy is testable with a fake clock."""
+
+    def __init__(self, registry: ArtifactRegistry,
+                 deadline_s: float = 0.002, flush_rows: int = 1,
+                 clock: Callable[[], float] = time.monotonic,
+                 auto_flush: bool = True):
+        self.registry = registry
+        self.deadline_s = float(deadline_s)
+        self.flush_rows = int(flush_rows)
+        self.clock = clock
+        self.auto_flush = auto_flush
+        self._batchers: Dict[str, MicroBatcher] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    def _batcher(self, tenant: str) -> MicroBatcher:
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("service is closed")
+            b = self._batchers.get(tenant)
+            if b is None:
+                b = MicroBatcher(
+                    # resolved at flush time so registry eviction/reload
+                    # works transparently underneath a live batcher
+                    (lambda _t=tenant: self.registry.get(_t).predict),
+                    deadline_s=self.deadline_s,
+                    flush_rows=self.flush_rows,
+                    clock=self.clock, auto_flush=self.auto_flush)
+                self._batchers[tenant] = b
+            return b
+
+    def submit(self, tenant: str, xs: Sequence[Any]) -> Future:
+        entry = self.registry.get(tenant)       # lazy load on first touch
+        entry.validate_request(xs)
+        return self._batcher(tenant).submit(xs)
+
+    def predict(self, tenant: str, xs: Sequence[Any],
+                timeout: Optional[float] = None):
+        return self.submit(tenant, xs).result(timeout)
+
+    def warmup(self, tenant: str) -> int:
+        """Compile the tenant's full bucket cache up front (one launch per
+        bucket size) so no live request pays a compile. Returns the
+        number of buckets compiled."""
+        entry = self.registry.get(tenant)
+        return entry.predict.compile_buckets(entry.widths)
+
+    def poll(self) -> int:
+        """Manual flush pump (``auto_flush=False`` / fake-clock runs):
+        flush every tenant whose deadline policy says a flush is due."""
+        with self._lock:
+            batchers = list(self._batchers.values())
+        return sum(b.poll() for b in batchers)
+
+    def flush(self) -> int:
+        with self._lock:
+            batchers = list(self._batchers.values())
+        return sum(b.flush() for b in batchers)
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            batchers = list(self._batchers.values())
+        for b in batchers:
+            b.close()
+
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            per_tenant = {t: b.stats() for t, b in self._batchers.items()}
+        return {"registry": self.registry.stats(), "tenants": per_tenant}
+
+
+# --------------------------------------------------------------------------
+# the load harness: concurrent clients vs the one-at-a-time baseline
+# --------------------------------------------------------------------------
+
+def _latency_stats(latencies: Sequence[float], wall: float,
+                   clients: int) -> Dict[str, Any]:
+    lat_ms = np.asarray(sorted(latencies)) * 1e3
+    return {
+        "requests": len(latencies),
+        "clients": clients,
+        "seconds": float(wall),
+        "requests_per_sec": len(latencies) / wall,
+        "p50_ms": float(np.percentile(lat_ms, 50)),
+        "p99_ms": float(np.percentile(lat_ms, 99)),
+        "mean_ms": float(lat_ms.mean()),
+    }
+
+
+def run_load(service: GALService,
+             requests: Sequence[Tuple[str, Sequence[Any]]],
+             clients: int = 8, depth: int = 1) -> Dict[str, Any]:
+    """Fire ``requests`` (a list of ``(tenant, xs)``) at the service from
+    ``clients`` concurrent threads (request i goes to client i % clients,
+    each client sequential — a closed-loop load generator). ``depth`` is
+    the per-client pipeline: each client keeps up to ``depth`` requests
+    in flight before draining them in submission order (``depth=1`` is
+    the strict request/response client; ``depth>1`` models an async
+    client multiplexing a connection, and is what lets the batcher see
+    more than ``clients`` rows at once). Latency is measured per
+    request, submit to completed result. Returns throughput +
+    percentile stats."""
+    if clients < 1:
+        raise ValueError(f"clients must be >= 1, got {clients}")
+    if depth < 1:
+        raise ValueError(f"depth must be >= 1, got {depth}")
+    latencies: List[float] = []
+    lock = threading.Lock()
+
+    def client(ci: int) -> None:
+        lats = []
+        mine = range(ci, len(requests), clients)
+        for s in range(0, len(mine), depth):
+            window = mine[s:s + depth]
+            futs = []
+            for ri in window:
+                tenant, xs = requests[ri]
+                futs.append((service.submit(tenant, xs),
+                             time.perf_counter()))
+            for fut, t_sub in futs:
+                fut.result()
+                lats.append(time.perf_counter() - t_sub)
+        with lock:
+            latencies.extend(lats)
+
+    t0 = time.perf_counter()
+    with ThreadPoolExecutor(max_workers=clients) as ex:
+        # list() re-raises the first client exception instead of hiding it
+        list(ex.map(client, range(clients)))
+    wall = time.perf_counter() - t0
+    return {**_latency_stats(latencies, wall, clients), "depth": depth}
+
+
+def run_serial(registry: ArtifactRegistry,
+               requests: Sequence[Tuple[str, Sequence[Any]]]
+               ) -> Dict[str, Any]:
+    """The one-request-at-a-time baseline: the SAME artifacts and the same
+    bucketed jit cache, but every request is its own blocked device
+    launch — no packing, no concurrency. This is what the batched
+    throughput is measured against."""
+    latencies = []
+    t0 = time.perf_counter()
+    for tenant, xs in requests:
+        entry = registry.get(tenant)
+        t1 = time.perf_counter()
+        jax.block_until_ready(entry.predict(xs))
+        latencies.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    return _latency_stats(latencies, wall, clients=1)

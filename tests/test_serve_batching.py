@@ -1,0 +1,425 @@
+"""The inference service: bucketed batching parity + registry lifecycle.
+
+The load-bearing guarantee is **packing safety**: the batcher may pad a
+request to a bucket shape and pack it with strangers (same tenant), and
+at that fixed bucket shape the rows that come back are BITWISE
+independent of the batch content around them — zero pad, garbage pad,
+or co-packed requests all land in other rows of the row-independent
+Prediction Stage. Across *different* bucket shapes XLA may round the
+same row differently (it specializes on the batch dimension), which is
+exactly why the bucket choice is a deterministic function of the
+request size: the same request always runs the same compiled program
+and returns the same bits.
+
+Also pinned here: the registry's lazy load / LRU evict / reload cycle
+serves bitwise-identical outputs across reloads, the deadline flush
+policy under a fake clock, and that concurrent submissions across
+tenants never leak rows into another tenant's launch.
+"""
+import threading
+import time
+from concurrent.futures import Future
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gal
+from repro.core.gal import GALConfig
+from repro.core.losses import get_loss
+from repro.core.organizations import make_orgs
+from repro.data.partition import split_features
+from repro.data.synthetic import make_regression, train_test_split
+from repro.models.zoo import Linear
+from repro.serve import (ArtifactRegistry, BucketedPredict, GALService,
+                         MicroBatcher, bucket_for, bucket_sizes, pad_rows,
+                         request_widths, run_load, run_serial)
+
+ORGS, D_TOTAL, ROUNDS = 3, 12, 3
+
+
+def _fit(seed=0, noise_sigmas=None):
+    rng = np.random.default_rng(seed)
+    ds = make_regression(rng, n=128, d=D_TOTAL)
+    train, test = train_test_split(ds, rng)
+    xs = split_features(train.x, ORGS)
+    # noisy orgs route through the grouped engine ('auto' picks it)
+    engine = "auto" if noise_sigmas else "scan"
+    res = gal.fit(jax.random.PRNGKey(seed),
+                  make_orgs(xs, Linear(), noise_sigmas=noise_sigmas),
+                  train.y, get_loss("mse"),
+                  GALConfig(rounds=ROUNDS, engine=engine))
+    xs_te = [np.asarray(x) for x in split_features(test.x, ORGS)]
+    return res, xs_te
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    return _fit(0)
+
+
+@pytest.fixture(scope="module")
+def fitted_other():
+    return _fit(1)
+
+
+# --------------------------------------------------------------------------
+# bucket policy units
+# --------------------------------------------------------------------------
+
+def test_bucket_sizes_powers_of_two_plus_max():
+    assert bucket_sizes(64) == (1, 2, 4, 8, 16, 32, 64)
+    assert bucket_sizes(48) == (1, 2, 4, 8, 16, 32, 48)
+    assert bucket_sizes(1) == (1,)
+    with pytest.raises(ValueError):
+        bucket_sizes(0)
+
+
+def test_bucket_for_smallest_holding_bucket():
+    buckets = bucket_sizes(16)
+    assert [bucket_for(n, buckets) for n in (1, 2, 3, 5, 8, 9, 16)] == \
+        [1, 2, 4, 8, 8, 16, 16]
+    with pytest.raises(ValueError):
+        bucket_for(0, buckets)
+    with pytest.raises(ValueError, match="exceed"):
+        bucket_for(17, buckets)
+
+
+def test_pad_rows_zero_pads_fresh_buffers():
+    xs = [np.arange(6, dtype=np.float32).reshape(2, 3)]
+    (padded,) = pad_rows(xs, 4)
+    assert padded.shape == (4, 3)
+    np.testing.assert_array_equal(padded[:2], xs[0])
+    np.testing.assert_array_equal(padded[2:], 0.0)
+    # exact-fit requests are passed through, larger targets are fresh
+    assert pad_rows(xs, 2)[0] is not padded
+
+
+# --------------------------------------------------------------------------
+# bitwise parity: bucketed/padded serving never changes an answer
+# --------------------------------------------------------------------------
+
+def test_bucketed_bitwise_vs_unbatched_at_every_bucket_size(fitted):
+    """A request of exactly bucket-size rows goes through the SAME batch
+    shape the unbatched jitted predict would compile — bitwise equal."""
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=16)
+    unbatched = jax.jit(lambda xq: res.predict(xq))
+    for b in bp.buckets:
+        req = [x[:b] for x in xs_te]
+        np.testing.assert_array_equal(np.asarray(bp(req)),
+                                      np.asarray(unbatched(req)))
+
+
+def test_ragged_rows_bitwise_independent_of_batch_content(fitted):
+    """Ragged requests are padded up to their bucket. At that FIXED
+    bucket shape a row's bits must not depend on what else is in the
+    batch — zero pad, garbage pad, or co-packed strangers all land in
+    other rows of a row-independent prediction. (Across DIFFERENT bucket
+    shapes XLA may round differently — which is exactly why the bucket
+    choice is a deterministic function of the request size.)"""
+    res, xs_te = fitted
+    rng = np.random.default_rng(7)
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=16)
+    unbatched = jax.jit(lambda xq: res.predict(xq))
+    for n in (1, 3, 5, 7, 9, 15):
+        req = [x[:n] for x in xs_te]
+        b = bucket_for(n, bp.buckets)
+        got = np.asarray(bp(req))
+        assert got.shape[0] == n
+        # deterministic: the same request always takes the same bucket
+        np.testing.assert_array_equal(got, np.asarray(bp(req)))
+        # zero pad vs garbage pad at the same bucket shape: same bits
+        for pad in (np.zeros, lambda s, d: rng.normal(size=s).astype(d)):
+            full = [np.concatenate(
+                [x[:n], np.asarray(pad((b - n,) + x.shape[1:],
+                                       x.dtype))]) if b > n else x[:n]
+                for x in xs_te]
+            np.testing.assert_array_equal(
+                got, np.asarray(unbatched(full))[:n],
+                err_msg=f"pad content changed bits at bucket {b}, n={n}")
+
+
+def test_packed_requests_bitwise_equal_to_packed_launch(fitted):
+    """The micro-batcher guarantee: each packed request gets back exactly
+    its own rows of the bucket-shaped launch that actually ran (bitwise
+    vs a hand-packed reference at the same shape), and those rows agree
+    with serving the request alone to float precision (a different
+    bucket shape may round differently — see the ragged test)."""
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=16)
+    unbatched = jax.jit(lambda xq: res.predict(xq))
+    reqs = [[x[i:i + 1] for x in xs_te] for i in range(5)]
+
+    mb = MicroBatcher(lambda: bp, auto_flush=False)
+    futs = [mb.submit(r) for r in reqs]
+    assert mb.flush() == 5
+    # hand-pack the same 5 rows to the same bucket (5 -> 8) and launch
+    packed = pad_rows([np.concatenate([np.asarray(r[m]) for r in reqs])
+                       for m in range(len(xs_te))], 8)
+    ref = np.asarray(unbatched(packed))[:5]
+    for i, fut in enumerate(futs):
+        got = np.asarray(fut.result(timeout=0))
+        np.testing.assert_array_equal(got, ref[i:i + 1])
+        np.testing.assert_allclose(got, np.asarray(bp(reqs[i])),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_microbatcher_chunks_oversized_flushes(fitted):
+    """Pending rows past max_batch are chunked into several launches —
+    results still route back to the right request, bitwise equal to
+    hand-launching the same chunks at the same shapes."""
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=4)
+    unbatched = jax.jit(lambda xq: res.predict(xq))
+    mb = MicroBatcher(lambda: bp, auto_flush=False)
+    reqs = [[x[i * 2:i * 2 + 2] for x in xs_te] for i in range(3)]  # 6 rows
+    futs = [mb.submit(r) for r in reqs]
+    assert mb.flush() == 3
+    # the flush chunks pending rows [0:4] (bucket 4) and [4:6] (bucket 2)
+    cat = [np.concatenate([np.asarray(r[m]) for r in reqs])
+           for m in range(len(xs_te))]
+    ref = np.concatenate([np.asarray(unbatched([c[:4] for c in cat])),
+                          np.asarray(unbatched([c[4:6] for c in cat]))])
+    for i, fut in enumerate(futs):
+        np.testing.assert_array_equal(np.asarray(fut.result(timeout=0)),
+                                      ref[i * 2:i * 2 + 2])
+    assert mb.stats()["rows"] == 6
+    assert bp.launches >= 2          # 6 rows cannot fit one 4-row launch
+
+
+def test_jit_cache_bounded_by_bucket_count(fitted):
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=8)
+    widths = [x.shape[1] for x in xs_te]
+    assert bp.compile_buckets(widths) == len(bp.buckets) == 4
+    for n in range(1, 9):            # every size maps onto a warm bucket
+        bp([x[:n] for x in xs_te])
+    assert bp.rows_padded > 0
+
+
+# --------------------------------------------------------------------------
+# registry: lazy load, LRU eviction, reload parity, rejection
+# --------------------------------------------------------------------------
+
+def test_registry_lazy_load_evict_reload_bitwise(fitted, tmp_path):
+    from repro.checkpoint import save_artifact
+    res, xs_te = fitted
+    save_artifact(res, tmp_path / "art")
+
+    reg = ArtifactRegistry(max_batch=8)
+    reg.register("acme", tmp_path / "art")
+    assert "acme" in reg and not reg.is_loaded("acme")
+    assert reg.loads == 0            # registration peeks the manifest only
+
+    req = [x[:3] for x in xs_te]
+    first = np.asarray(reg.get("acme").predict(req))
+    assert reg.is_loaded("acme") and reg.loads == 1
+
+    assert reg.evict("acme") and not reg.is_loaded("acme")
+    assert not reg.evict("acme")     # already out
+    again = np.asarray(reg.get("acme").predict(req))
+    assert reg.loads == 2 and reg.get("acme").loads == 2
+    np.testing.assert_array_equal(first, again)
+
+
+def test_registry_lru_eviction_bounded(fitted, fitted_other, tmp_path):
+    from repro.checkpoint import save_artifact
+    res_a, xs_te = fitted
+    res_b, _ = fitted_other
+    save_artifact(res_a, tmp_path / "a")
+    save_artifact(res_b, tmp_path / "b")
+    reg = ArtifactRegistry(max_loaded=1, max_batch=8)
+    reg.register("a", tmp_path / "a")
+    reg.register("b", tmp_path / "b")
+    reg.get("a")
+    reg.get("b")                     # evicts a (LRU)
+    assert reg.is_loaded("b") and not reg.is_loaded("a")
+    assert reg.evictions == 1
+    reg.get("a")                     # transparently reloads
+    assert reg.is_loaded("a") and not reg.is_loaded("b")
+    assert reg.stats()["loads"] == 3
+
+
+def test_registry_rejects_unknown_and_unservable(fitted):
+    res, _ = fitted
+    reg = ArtifactRegistry()
+    with pytest.raises(ValueError, match="unknown tenant"):
+        reg.get("nobody")
+    with pytest.raises(ValueError, match="not an artifact|manifest"):
+        reg.register("bad", "/nonexistent/artifact-dir")
+
+    noisy, _ = _fit(2, noise_sigmas=[0.5] * ORGS)
+    with pytest.raises(ValueError, match="noisy"):
+        reg.register("noisy", noisy)
+
+
+def test_request_widths_and_validation(fitted):
+    res, xs_te = fitted
+    widths = request_widths(res)
+    assert widths == [x.shape[1] for x in xs_te]
+
+    reg = ArtifactRegistry(max_batch=8)
+    reg.register("t", res)
+    entry = reg.get("t")
+    req = [x[:2] for x in xs_te]
+    entry.validate_request(req)      # well-formed
+    with pytest.raises(ValueError, match="organizations"):
+        entry.validate_request(req[:-1])
+    with pytest.raises(ValueError, match="row count"):
+        entry.validate_request([xs_te[0][:2]] + [x[:3] for x in xs_te[1:]])
+    with pytest.raises(ValueError, match="column"):
+        entry.validate_request([x[:2, :-1] for x in xs_te])
+
+
+# --------------------------------------------------------------------------
+# deadline flush policy under a fake clock (no sleeping)
+# --------------------------------------------------------------------------
+
+class FakeClock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+
+def test_deadline_flush_fires_on_age_or_rows(fitted):
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=8)
+    clock = FakeClock()
+    mb = MicroBatcher(lambda: bp, deadline_s=0.002, flush_rows=4,
+                      clock=clock, auto_flush=False)
+    req = [x[:1] for x in xs_te]
+
+    fut = mb.submit(req)
+    assert mb.poll() == 0            # 1 row < flush_rows, age 0 < deadline
+    clock.now = 0.0019
+    assert mb.poll() == 0            # still inside the deadline
+    clock.now = 0.0021
+    assert mb.poll() == 1            # oldest request aged out -> flush
+    assert fut.done()
+
+    futs = [mb.submit(req) for _ in range(4)]
+    assert mb.poll() == 4            # flush_rows reached: no age needed
+    assert all(f.done() for f in futs)
+    assert mb.poll() == 0            # nothing pending
+
+
+def test_flusher_thread_drains_on_close(fitted):
+    res, xs_te = fitted
+    bp = BucketedPredict(lambda xq: res.predict(xq), max_batch=8)
+    mb = MicroBatcher(lambda: bp, deadline_s=0.001)
+    fut = mb.submit([x[:1] for x in xs_te])
+    got = fut.result(timeout=5.0)    # background flusher resolves it
+    assert np.asarray(got).shape[0] == 1
+    mb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        mb.submit([x[:1] for x in xs_te])
+
+
+# --------------------------------------------------------------------------
+# the service: tenant isolation under concurrent submission
+# --------------------------------------------------------------------------
+
+def test_concurrent_submissions_never_mix_tenants(fitted, fitted_other):
+    """Two tenants with different fitted params, many threads submitting
+    interleaved single-row requests: after a flush-all, every result is
+    bitwise the submitting tenant's own prediction — a mixed-up batch
+    would return another collaboration's numbers."""
+    res_a, xs_a = fitted
+    res_b, xs_b = fitted_other
+    reg = ArtifactRegistry(max_batch=8)
+    reg.register("a", res_a)
+    reg.register("b", res_b)
+    svc = GALService(reg, auto_flush=False, clock=FakeClock())
+
+    # per-row references at bucket shape 4 — the shape each tenant's
+    # 4-row flush launches. Concurrent arrival order decides each row's
+    # POSITION in its batch, so assert to float precision: the two
+    # collaborations' predictions differ grossly, so any cross-tenant
+    # leak fails loudly. (Bitwise routing at a fixed packing order is
+    # pinned by test_packed_requests_bitwise_equal_to_packed_launch.)
+    want = {"a": {}, "b": {}}
+    for tenant, res, xs in (("a", res_a, xs_a), ("b", res_b, xs_b)):
+        ref = np.asarray(jax.jit(lambda xq, _r=res: _r.predict(xq))(
+            [x[:4] for x in xs]))
+        for i in range(4):
+            want[tenant][i] = ref[i:i + 1]
+
+    results, lock = [], threading.Lock()
+
+    def client(tenant, xs, i):
+        fut = svc.submit(tenant, [x[i:i + 1] for x in xs])
+        with lock:
+            results.append((tenant, i, fut))
+
+    threads = [threading.Thread(target=client, args=(t, xs, i))
+               for i in range(4) for t, xs in (("a", xs_a), ("b", xs_b))]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert svc.flush() == 8          # both tenants' batchers drain
+    for tenant, i, fut in results:
+        np.testing.assert_allclose(np.asarray(fut.result(timeout=0)),
+                                   want[tenant][i], rtol=1e-5, atol=1e-6,
+                                   err_msg=f"tenant {tenant} row {i}")
+    stats = svc.stats()["tenants"]
+    assert stats["a"]["rows"] == 4 and stats["b"]["rows"] == 4
+    svc.close()
+
+
+def test_service_validates_before_enqueue(fitted):
+    res, xs_te = fitted
+    reg = ArtifactRegistry(max_batch=8)
+    reg.register("t", res)
+    svc = GALService(reg, auto_flush=False, clock=FakeClock())
+    with pytest.raises(ValueError, match="organizations"):
+        svc.submit("t", [x[:1] for x in xs_te][:-1])
+    with pytest.raises(ValueError, match="unknown tenant"):
+        svc.submit("ghost", [x[:1] for x in xs_te])
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit("t", [x[:1] for x in xs_te])
+
+
+def test_load_harness_round_trips_every_request(fitted, fitted_other):
+    res_a, xs_a = fitted
+    res_b, xs_b = fitted_other
+    reg = ArtifactRegistry(max_batch=8)
+    reg.register("a", res_a)
+    reg.register("b", res_b)
+    requests = []
+    for i in range(24):
+        tenant, xs = (("a", xs_a), ("b", xs_b))[i % 2]
+        requests.append((tenant, [x[i % 8:i % 8 + 1] for x in xs]))
+
+    serial = run_serial(reg, requests)
+    assert serial["requests"] == 24 and serial["requests_per_sec"] > 0
+
+    svc = GALService(reg, deadline_s=0.001)
+    try:
+        load = run_load(svc, requests, clients=4, depth=2)
+    finally:
+        svc.close()
+    assert load["requests"] == 24 and load["depth"] == 2
+    assert load["p99_ms"] >= load["p50_ms"] > 0
+
+
+# --------------------------------------------------------------------------
+# serve-CLI measurement helper (--steps 0 regression)
+# --------------------------------------------------------------------------
+
+def test_measure_request_path_steps_zero_and_semantics():
+    from repro.launch.serve import measure_request_path
+    assert measure_request_path(lambda: 0, 0) == (None, None)
+    calls = []
+
+    def fn():
+        calls.append(1)
+        return np.zeros(())
+
+    lat, thr = measure_request_path(fn, 3)
+    assert len(calls) == 6           # 3 blocked + 3 pipelined
+    assert lat > 0 and thr > 0
